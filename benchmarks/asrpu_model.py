@@ -1,0 +1,95 @@
+"""ASRPU analytical performance model (paper §5.1 methodology).
+
+The paper estimates execution time by instruction counting: "a loop will
+usually consist of two instructions for the comparison and conditional
+jump, one instruction for the variable update and the instructions for
+the loop body, all multiplied by the average number of iterations ...
+every PE executes one instruction per cycle" — divided by 8 PEs @ 500 MHz.
+
+We reproduce that model over our kernel plan (core/scheduler.StepPlan):
+
+  MAC loop body (conv/fc, 8-wide vector MAC): 1 vMAC + 2 vector loads +
+    3 loop bookkeeping = 6 instr / 8 inputs; +12 instr thread prologue /
+    activation / store.
+  LayerNorm thread: two reduction passes + normalize = 3 passes x n/8
+    vector ops x 2 instr + 16.
+  MFCC thread: macs_per_thread from the plan (FFT counted 5 n log n).
+  Hypothesis expansion thread: per candidate ~24 instr (gather node,
+    score add, hash, emit) x (2C+2) candidates + LM lookup 12.
+
+These constants are stated here once and used for every kernel — the
+claim check (paper: 40 ms per 80 ms step => 2x real-time) is then a
+genuine output of the model, not a fit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+from repro.configs.tds_asr import ASRPU_HW, DECODER_CONFIG, TDS_CONFIG
+from repro.core.scheduler import PlannedKernel, StepPlan, make_step_plan
+
+INSTR_PER_VMAC_ITER = 6
+THREAD_PROLOGUE = 12
+LN_INSTR_PER_VEC = 2
+LN_PROLOGUE = 16
+HYP_INSTR_PER_CAND = 24
+HYP_LM_LOOKUP = 12
+
+
+@dataclass
+class KernelTime:
+    name: str
+    kind: str
+    n_threads: int
+    instr: float
+    time_ms: float
+    weight_kb: float
+    n_subkernels: int
+
+
+def kernel_time(k: PlannedKernel, hw=ASRPU_HW) -> KernelTime:
+    v = hw.mac_vector
+    if k.kind in ("conv", "fc", "feature"):
+        per_thread = (k.macs_per_thread / v) * INSTR_PER_VMAC_ITER \
+            + THREAD_PROLOGUE
+    elif k.kind == "layernorm":
+        per_thread = 3 * (k.macs_per_thread / 2 / v) * LN_INSTR_PER_VEC \
+            + LN_PROLOGUE
+    else:
+        per_thread = k.macs_per_thread
+    instr = k.n_threads * per_thread
+    t = instr / (hw.n_pes * hw.freq_hz)
+    return KernelTime(k.name, k.kind, k.n_threads, instr, t * 1e3,
+                      k.weight_bytes / 1024.0, k.n_subkernels)
+
+
+def hyp_expansion_time(n_hyps: int, max_children: int,
+                       n_frames: int, hw=ASRPU_HW) -> KernelTime:
+    cands = 2 * max_children + 2
+    per_thread = cands * HYP_INSTR_PER_CAND + HYP_LM_LOOKUP
+    instr = n_frames * n_hyps * per_thread
+    t = instr / (hw.n_pes * hw.freq_hz)
+    return KernelTime("hyp_expansion", "hyp", n_frames * n_hyps, instr,
+                      t * 1e3, 0.0, 1)
+
+
+def step_breakdown(plan: StepPlan = None, n_hyps: int = None,
+                   hw=ASRPU_HW) -> List[KernelTime]:
+    if plan is None:
+        plan = make_step_plan(TDS_CONFIG)
+    if n_hyps is None:
+        n_hyps = DECODER_CONFIG.beam_size
+    out = [kernel_time(k, hw) for k in plan.kernels]
+    out.append(hyp_expansion_time(n_hyps, DECODER_CONFIG.max_children,
+                                  plan.acoustic_frames_per_step, hw))
+    return out
+
+
+def step_time_ms(hw=ASRPU_HW) -> float:
+    return sum(k.time_ms for k in step_breakdown(hw=hw))
+
+
+def realtime_factor(hw=ASRPU_HW) -> float:
+    """<1 means faster than real time; paper reports 0.5 (2x real-time)."""
+    return step_time_ms(hw) / hw.step_audio_ms

@@ -1,0 +1,213 @@
+"""Benchmark harness — one function per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+
+  fig9_layer_sizes    — paper Fig. 9: TDS layer weight sizes (KB)
+  fig11_kernel_times  — paper Fig. 11: per-kernel exec time via the
+                        instruction-count model (§5.1)
+  sec54_realtime      — paper §5.4 headline: decoding-step time vs the
+                        80 ms audio window (paper: ~40 ms => 2x real-time)
+  rtf_measured        — measured JAX wall-clock RTF of the streaming
+                        decoder on this CPU (not the ASRPU estimate)
+  beam_throughput     — hypothesis-expansion executions/sec (measured)
+  kernel_<name>       — Pallas kernels, interpret-mode wall time +
+                        analytic v5e roofline time (derived column)
+  dryrun_summary      — roofline terms per dry-run artifact (if present)
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import asrpu_model
+from repro.configs.tds_asr import (ASRPU_HW, DECODER_CONFIG, FEATURE_CONFIG,
+                                   TDS_CONFIG, DecoderConfig, FeatureConfig,
+                                   TDSConfig, TDSStage)
+from repro.core import decoder, features, lexicon as lx
+from repro.core.scheduler import ASRPU, make_step_plan
+from repro.kernels import ops
+from repro.models import tds
+
+ROWS = []
+
+
+def row(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def _timeit(fn, *args, n=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+# ---------------------------------------------------------------------------
+def fig9_layer_sizes():
+    """Layer weight KB; paper: convs in a few KB, FCs in the MB range,
+    example 1200x1200 FC = 1.4MB split into 2 kernels of 600 neurons."""
+    specs = tds.build_kernel_specs(TDS_CONFIG)
+    conv_kb = [s.weight_bytes / 1024 for s in specs if s.kind == "conv"]
+    fc_kb = [s.weight_bytes / 1024 for s in specs if s.kind in ("fc", "head")]
+    row("fig9_conv_max_kb", 0.0, f"{max(conv_kb):.1f}")
+    row("fig9_fc_max_kb", 0.0, f"{max(fc_kb):.1f}")
+    fc1200 = [s for s in specs if s.n_in == 1200 and s.kind == "fc"][0]
+    row("fig9_fc1200_mb", 0.0,
+        f"{fc1200.weight_bytes/2**20:.2f}MB_in_{fc1200.n_subkernels}_kernels")
+    assert max(conv_kb) < 64 and max(fc_kb) > 1024  # paper's shape of Fig 9
+
+
+def fig11_kernel_times():
+    """Per-kernel execution time estimates (instruction-count model)."""
+    times = asrpu_model.step_breakdown()
+    by_kind = {}
+    for k in times:
+        by_kind.setdefault(k.kind, 0.0)
+        by_kind[k.kind] += k.time_ms
+    for kind, ms in sorted(by_kind.items()):
+        row(f"fig11_{kind}_ms", ms * 1e3, f"{ms:.2f}ms_per_step")
+    worst = max(times, key=lambda k: k.time_ms)
+    row("fig11_slowest_kernel", worst.time_ms * 1e3, worst.name)
+
+
+def sec54_realtime():
+    est = asrpu_model.step_time_ms()
+    rtf = asrpu_model.realtime_factor()
+    row("sec54_step_ms_est", est * 1e3,
+        f"paper=40ms;model={est:.1f}ms_per_80ms")
+    row("sec54_rtf_est", 0.0,
+        f"{rtf:.2f}x_realtime(paper=0.50;<1_is_realtime)")
+
+
+# ---------------------------------------------------------------------------
+def rtf_measured():
+    """Actual CPU wall-clock of the fused decoding step (full TDS)."""
+    words = {f"w{i}": [1 + (i * 7 + j) % 30 for j in range(3)]
+             for i in range(20)}
+    lex = lx.build_lexicon(words, max_children=32)
+    lm = lx.uniform_bigram(len(words))
+    params = tds.init_tds(jax.random.PRNGKey(0), TDS_CONFIG)
+    asrpu = ASRPU()
+    asrpu.configure_acoustic_scoring(TDS_CONFIG, params)
+    asrpu.configure_hyp_expansion(lex, lm, DecoderConfig(beam_size=64))
+    audio = np.random.RandomState(0).randn(16000 * 2).astype(np.float32)
+    spp = asrpu.plan.samples_per_step
+    asrpu.decoding_step(audio[:spp * 2])     # warmup/compile
+    t0 = time.perf_counter()
+    n = 0
+    for off in range(spp * 2, len(audio) - spp, spp):
+        asrpu.decoding_step(audio[off:off + spp])
+        n += 1
+    dt = time.perf_counter() - t0
+    per_step = dt / max(n, 1)
+    row("rtf_measured_step", per_step * 1e6,
+        f"cpu_rtf={per_step/0.080:.2f}")
+
+
+def beam_throughput():
+    words = {f"w{i}": [1 + (i * 7 + j) % 30 for j in range(3)]
+             for i in range(20)}
+    lex = lx.build_lexicon(words, max_children=32)
+    lm = lx.uniform_bigram(len(words))
+    cfg = DecoderConfig(beam_size=128)
+    logp = jax.nn.log_softmax(
+        jnp.asarray(np.random.RandomState(0).randn(32).astype(np.float32)))
+    st = decoder.init_state(cfg.beam_size, lm)
+    step = jax.jit(lambda s, lp: decoder.expand_step(s, lp, lex, lm, cfg))
+    us, _ = _timeit(step, st, logp, n=20)
+    row("beam_expand_step", us, f"{1e6/us:.0f}_expansions_per_s")
+
+
+# ---------------------------------------------------------------------------
+V5E_FLOPS = 197e12
+V5E_HBM = 819e9
+
+
+def kernel_benches():
+    R = np.random.RandomState(0)
+    # int8 matmul — ASRPU's hot loop: the 1200x1200 FC layer (fig 9)
+    x = jnp.asarray(R.randn(8, 1200).astype(np.float32))
+    w = jnp.asarray(R.randn(1200, 1200).astype(np.float32))
+    us, _ = _timeit(ops.int8_matmul, x, w, n=3, warmup=1)
+    flops = 2 * 8 * 1200 * 1200
+    v5e_us = max(flops / (V5E_FLOPS * 2),          # int8 ~2x bf16 peak
+                 (1200 * 1200 + 8 * 1200 * 2) / V5E_HBM) * 1e6
+    row("kernel_int8_matmul_fc1200", us, f"v5e_est={v5e_us:.2f}us")
+
+    q = jnp.asarray(R.randn(1, 8, 256, 64).astype(np.float32))
+    us, _ = _timeit(lambda: ops.flash_attention(q, q, q, block_q=64,
+                                                block_kv=64), n=3, warmup=1)
+    flops = 2 * 2 * 8 * 256 * 256 * 64 * 0.5
+    row("kernel_flash_attention_256", us,
+        f"v5e_est={flops/V5E_FLOPS*1e6:.2f}us")
+
+    xx = jnp.asarray(R.randn(512, 1840).astype(np.float32))
+    s = jnp.ones((1840,), jnp.float32)
+    b = jnp.zeros((1840,), jnp.float32)
+    us, _ = _timeit(ops.layernorm, xx, s, b, n=3, warmup=1)
+    bytes_ = 2 * 512 * 1840 * 4
+    row("kernel_layernorm_512x1840", us,
+        f"v5e_est={bytes_/V5E_HBM*1e6:.2f}us")
+
+    p = jnp.abs(jnp.asarray(R.randn(256, 257).astype(np.float32)))
+    fb = jnp.asarray(features.mel_filterbank(FEATURE_CONFIG))
+    dct = jnp.asarray(features.dct_matrix(80, 80))
+    us, _ = _timeit(ops.logmel, p, fb, dct, n=3, warmup=1)
+    row("kernel_logmel_256", us, "fused_mel+log+dct")
+
+    sc = jnp.asarray(R.randn(8448).astype(np.float32))
+    us, _ = _timeit(lambda: ops.beam_prune(sc, 25.0), n=3, warmup=1)
+    row("kernel_beam_prune_8448", us, "hypothesis_unit_threshold")
+
+    xc = jnp.asarray(R.randn(8 + 64, 80, 15).astype(np.float32))
+    wc = jnp.asarray(R.randn(9, 15, 15).astype(np.float32) * 0.1)
+    bc = jnp.zeros((15,), jnp.float32)
+    us, _ = _timeit(lambda: ops.tds_conv(xc, wc, bc), n=3, warmup=1)
+    row("kernel_tds_conv_64", us, "stage1_conv")
+
+
+def dryrun_summary():
+    art = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+    if not art.exists():
+        row("dryrun_summary", 0.0, "no_artifacts")
+        return
+    n_ok = n_skip = n_fail = 0
+    worst = (0.0, "")
+    for f in sorted(art.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec["status"] == "ok":
+            n_ok += 1
+            r = rec.get("roofline", {})
+            t = max(r.get("t_compute", 0), r.get("t_memory", 0),
+                    r.get("t_collective", 0))
+            if t > worst[0]:
+                worst = (t, f.stem)
+        elif rec["status"] == "skipped":
+            n_skip += 1
+        else:
+            n_fail += 1
+    row("dryrun_cells", 0.0, f"ok={n_ok};skipped={n_skip};fail={n_fail}")
+    row("dryrun_worst_cell", worst[0] * 1e6, worst[1])
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig9_layer_sizes()
+    fig11_kernel_times()
+    sec54_realtime()
+    beam_throughput()
+    kernel_benches()
+    rtf_measured()
+    dryrun_summary()
+
+
+if __name__ == "__main__":
+    main()

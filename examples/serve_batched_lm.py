@@ -1,0 +1,27 @@
+"""End-to-end serving driver: batched LM inference with slot-based
+continuous batching (the paper's decoding-step structure generalized to
+LM decode — DESIGN.md §4).
+
+Serves a reduced mamba2 (attention-free: the ASRPU streaming-state model
+maps directly) with batched requests through prefill + fused decode steps.
+
+  PYTHONPATH=src python examples/serve_batched_lm.py [--arch mamba2-1.3b]
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "src"))
+
+from repro.launch import serve
+
+
+def main():
+    argv = ["--mode", "lm", "--arch", "mamba2-1.3b", "--requests", "6",
+            "--slots", "4", "--prompt-len", "16", "--max-new", "16"]
+    if len(sys.argv) > 1:
+        argv = sys.argv[1:]
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

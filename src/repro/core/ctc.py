@@ -1,0 +1,86 @@
+"""CTC loss (Graves et al. 2006) — forward algorithm in log space.
+
+The training counterpart of the decoder: wav2letter-style systems
+(paper §4) train the TDS acoustic model with CTC.  Standard extended
+label sequence (blank-interleaved), alpha recursion as a lax.scan over
+time, logsumexp accumulation, -1-padded labels supported.
+
+`ctc_loss` is validated against a brute-force path enumeration on small
+cases (tests/test_ctc.py) and used by the end-to-end ASR training test
+(train tiny TDS on synthetic utterances -> WER drops).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG = -1e30
+
+
+def ctc_loss(log_probs: jax.Array, labels: jax.Array,
+             blank_id: int = 0) -> jax.Array:
+    """log_probs: (T, V) log-softmax outputs; labels: (L,) int32, -1 pad.
+
+    Returns scalar negative log likelihood of the label sequence.
+    """
+    T, V = log_probs.shape
+    L = labels.shape[0]
+    n_lab = jnp.sum(labels >= 0)
+    lab = jnp.where(labels >= 0, labels, blank_id)
+    # extended sequence: blank, l1, blank, l2, ..., blank  (len 2L+1)
+    S = 2 * L + 1
+    ext = jnp.full((S,), blank_id, jnp.int32)
+    ext = ext.at[1::2].set(lab)
+    valid = jnp.arange(S) < 2 * n_lab + 1
+    # allow skip from s-2 when ext[s] != blank and ext[s] != ext[s-2]
+    ext_m2 = jnp.concatenate([jnp.full((2,), -2, jnp.int32), ext[:-2]])
+    can_skip = (jnp.arange(S) % 2 == 1) & (ext != ext_m2)
+
+    alpha0 = jnp.full((S,), NEG)
+    alpha0 = alpha0.at[0].set(log_probs[0, blank_id])
+    alpha0 = alpha0.at[1].set(jnp.where(n_lab > 0, log_probs[0, lab[0]], NEG))
+
+    def step(alpha, lp):
+        stay = alpha
+        prev = jnp.concatenate([jnp.full((1,), NEG), alpha[:-1]])
+        skip = jnp.where(can_skip,
+                         jnp.concatenate([jnp.full((2,), NEG), alpha[:-2]]),
+                         NEG)
+        a = jnp.logaddexp(jnp.logaddexp(stay, prev), skip)
+        a = a + lp[ext]
+        a = jnp.where(valid, a, NEG)
+        return a, None
+
+    alpha, _ = lax.scan(step, alpha0, log_probs[1:])
+    end1 = alpha[2 * n_lab]          # final blank
+    end2 = jnp.where(n_lab > 0, alpha[2 * n_lab - 1], NEG)
+    return -jnp.logaddexp(end1, end2)
+
+
+def ctc_loss_batch(log_probs: jax.Array, labels: jax.Array,
+                   blank_id: int = 0) -> jax.Array:
+    """(B, T, V) x (B, L) -> mean CTC loss."""
+    return jnp.mean(jax.vmap(lambda lp, lb: ctc_loss(lp, lb, blank_id))(
+        log_probs, labels))
+
+
+def edit_distance(ref, hyp) -> int:
+    """Levenshtein distance between two int sequences (python lists)."""
+    ref, hyp = list(ref), list(hyp)
+    dp = list(range(len(hyp) + 1))
+    for i, r in enumerate(ref, 1):
+        prev = dp[0]
+        dp[0] = i
+        for j, h in enumerate(hyp, 1):
+            cur = dp[j]
+            dp[j] = min(dp[j] + 1, dp[j - 1] + 1, prev + (r != h))
+            prev = cur
+    return dp[-1]
+
+
+def wer(refs, hyps) -> float:
+    """Word error rate over a corpus of (ref, hyp) id sequences."""
+    errs = sum(edit_distance(r, h) for r, h in zip(refs, hyps))
+    n = sum(len(r) for r in refs)
+    return errs / max(n, 1)

@@ -1,0 +1,242 @@
+"""CTC prefix-beam-search decoding with lexicon trie + n-gram LM (paper §4.3).
+
+Each hypothesis-expansion execution (one acoustic frame) expands every
+live hypothesis into:
+  * 1 "stay" candidate  — CTC blank (pb channel) + CTC repeat (pnb channel),
+  * C "continue" candidates — one per reachable lexicon-trie child,
+  * C "commit" candidates — child is word-final: word is emitted, the LM
+    scores the word, the hypothesis returns to the trie root.
+exactly the candidate structure of the paper's hypothesis-expansion kernel
+(reachable nodes + blank + repetition).  The hypothesis unit
+(core/hypothesis.py) then merges duplicates and sort-prunes to K.
+
+All state is fixed-shape struct-of-arrays; one utterance decode is a
+lax.scan over frames.  `greedy_decode` is the paper's "simplest approach"
+baseline (best token per frame, collapse repeats, drop blanks).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.tds_asr import DecoderConfig
+from repro.core import hypothesis as hyp
+from repro.core.lexicon import BigramLM, Lexicon
+
+NEG_INF = hyp.NEG_INF
+MAX_TOKENS = 256
+MAX_WORDS = 64
+
+
+def _mix(h: jax.Array, x: jax.Array) -> jax.Array:
+    """31-bit multiplicative prefix hash."""
+    return ((h * jnp.int32(1000003)) ^ (x + jnp.int32(0x9E3779B))) & jnp.int32(
+        0x7FFFFFFF)
+
+
+class BeamState(NamedTuple):
+    hash: jax.Array        # (K,)
+    pb: jax.Array          # (K,)
+    pnb: jax.Array         # (K,)
+    node: jax.Array        # (K,) lexicon trie node
+    lm_state: jax.Array    # (K,)
+    last_token: jax.Array  # (K,) last emitted token (-1 = none)
+    tokens: jax.Array      # (K, MAX_TOKENS) emitted token history
+    n_tokens: jax.Array    # (K,)
+    words: jax.Array       # (K, MAX_WORDS) committed word ids
+    n_words: jax.Array     # (K,)
+
+
+def init_state(k: int, lm: BigramLM) -> BeamState:
+    def full(v, dt=jnp.float32):
+        return jnp.full((k,), v, dt)
+    st = BeamState(
+        hash=jnp.zeros((k,), jnp.int32).at[0].set(1),
+        pb=full(NEG_INF).at[0].set(0.0),
+        pnb=full(NEG_INF),
+        node=jnp.zeros((k,), jnp.int32),
+        lm_state=jnp.full((k,), lm.start_state, jnp.int32),
+        last_token=full(-1, jnp.int32),
+        tokens=jnp.full((k, MAX_TOKENS), -1, jnp.int32),
+        n_tokens=jnp.zeros((k,), jnp.int32),
+        words=jnp.full((k, MAX_WORDS), -1, jnp.int32),
+        n_words=jnp.zeros((k,), jnp.int32),
+    )
+    return st
+
+
+def _append(arr, n, val):
+    """arr: (K, L); n: (K,); val: (K,) -> set arr[i, n[i]] = val[i]."""
+    L = arr.shape[-1]
+    onehot = jnp.arange(L)[None, :] == jnp.minimum(n, L - 1)[:, None]
+    return jnp.where(onehot, val[:, None], arr)
+
+
+def expand_step(state: BeamState, log_probs: jax.Array, lex: Lexicon,
+                lm: BigramLM, cfg: DecoderConfig,
+                use_pallas_prune: bool = False) -> BeamState:
+    """One hypothesis-expansion execution over one acoustic frame."""
+    K = state.hash.shape[0]
+    C = lex.max_children
+    lp = log_probs.astype(jnp.float32)
+    tot = hyp.total_score(state.pb, state.pnb)
+    alive = tot > NEG_INF / 2
+
+    # ---- stay candidates (blank + repeat), one per hypothesis ----------
+    lp_last = jnp.where(state.last_token >= 0,
+                        lp[jnp.maximum(state.last_token, 0)], NEG_INF)
+    stay = hyp.Candidates(
+        hash=state.hash,
+        pb=jnp.where(alive, tot + lp[cfg.blank_id], NEG_INF),
+        pnb=jnp.where(alive, state.pnb + lp_last, NEG_INF),
+        fields=dict(node=state.node, lm_state=state.lm_state,
+                    last_token=state.last_token, tokens=state.tokens,
+                    n_tokens=state.n_tokens, words=state.words,
+                    n_words=state.n_words),
+    )
+
+    # ---- extension candidates (continue / commit), K x C each ----------
+    child = lex.children[state.node]                     # (K, C)
+    ctok = lex.child_token[state.node]                   # (K, C)
+    has_child = child >= 0
+    ctok_s = jnp.maximum(ctok, 0)
+    lp_ext = jnp.where(has_child, lp[ctok_s], NEG_INF)   # (K, C)
+    # CTC merge rule: extending with the last token needs a blank in between
+    same = ctok_s == state.last_token[:, None]
+    base = jnp.where(same, state.pb[:, None], tot[:, None])
+    pnb_ext = jnp.where(alive[:, None], base + lp_ext, NEG_INF)  # (K, C)
+
+    h_ext = _mix(state.hash[:, None], ctok_s * 2)        # continue-hash
+    new_tokens = _append(
+        jnp.broadcast_to(state.tokens[:, None], (K, C, MAX_TOKENS)
+                         ).reshape(K * C, MAX_TOKENS),
+        jnp.broadcast_to(state.n_tokens[:, None], (K, C)).reshape(-1),
+        ctok_s.reshape(-1)).reshape(K, C, MAX_TOKENS)
+    n_tok_ext = state.n_tokens[:, None] + 1
+
+    def flat(x):
+        return x.reshape((K * C,) + x.shape[2:])
+
+    cont = hyp.Candidates(
+        hash=flat(h_ext),
+        pb=jnp.full((K * C,), NEG_INF),
+        pnb=flat(pnb_ext),
+        fields=dict(
+            node=flat(child),
+            lm_state=flat(jnp.broadcast_to(state.lm_state[:, None], (K, C))),
+            last_token=flat(ctok_s),
+            tokens=flat(new_tokens),
+            n_tokens=flat(jnp.broadcast_to(n_tok_ext, (K, C))),
+            words=flat(jnp.broadcast_to(state.words[:, None],
+                                        (K, C, MAX_WORDS))),
+            n_words=flat(jnp.broadcast_to(state.n_words[:, None], (K, C))),
+        ),
+    )
+
+    wid = jnp.where(has_child, lex.word_id[jnp.maximum(child, 0)], -1)  # (K,C)
+    is_word = wid >= 0
+    wid_s = jnp.maximum(wid, 0)
+    lm_sc = lm.score(jnp.broadcast_to(state.lm_state[:, None], (K, C)), wid_s)
+    commit_pnb = jnp.where(is_word,
+                           pnb_ext + cfg.lm_weight * lm_sc + cfg.word_score,
+                           NEG_INF)
+    h_commit = _mix(_mix(state.hash[:, None], ctok_s * 2 + 1), wid_s)
+    new_words = _append(
+        jnp.broadcast_to(state.words[:, None], (K, C, MAX_WORDS)
+                         ).reshape(K * C, MAX_WORDS),
+        jnp.broadcast_to(state.n_words[:, None], (K, C)).reshape(-1),
+        wid_s.reshape(-1)).reshape(K, C, MAX_WORDS)
+
+    commit = hyp.Candidates(
+        hash=flat(h_commit),
+        pb=jnp.full((K * C,), NEG_INF),
+        pnb=flat(commit_pnb),
+        fields=dict(
+            node=flat(jnp.where(is_word, lex.root, -1)),
+            lm_state=flat(lm.advance(
+                jnp.broadcast_to(state.lm_state[:, None], (K, C)), wid_s)),
+            last_token=flat(ctok_s),
+            tokens=flat(new_tokens),
+            n_tokens=flat(jnp.broadcast_to(n_tok_ext, (K, C))),
+            words=flat(new_words),
+            n_words=flat(jnp.broadcast_to(state.n_words[:, None] + 1, (K, C))),
+        ),
+    )
+
+    cand = hyp.Candidates(
+        hash=jnp.concatenate([stay.hash, cont.hash, commit.hash]),
+        pb=jnp.concatenate([stay.pb, cont.pb, commit.pb]),
+        pnb=jnp.concatenate([stay.pnb, cont.pnb, commit.pnb]),
+        fields={k: jnp.concatenate([stay.fields[k], cont.fields[k],
+                                    commit.fields[k]])
+                for k in stay.fields},
+    )
+    sel = hyp.hypothesis_unit_step(cand, K, cfg.beam_threshold,
+                                   use_pallas_prune)
+    return BeamState(
+        hash=sel["hash"], pb=sel["pb"], pnb=sel["pnb"], node=sel["node"],
+        lm_state=sel["lm_state"], last_token=sel["last_token"],
+        tokens=sel["tokens"], n_tokens=sel["n_tokens"], words=sel["words"],
+        n_words=sel["n_words"])
+
+
+def decode(log_probs: jax.Array, lex: Lexicon, lm: BigramLM,
+           cfg: DecoderConfig) -> BeamState:
+    """Offline decode: log_probs (T, V) -> final beam state."""
+    st = init_state(cfg.beam_size, lm)
+
+    def step(s, lp):
+        return expand_step(s, lp, lex, lm, cfg), None
+    st, _ = jax.lax.scan(step, st, log_probs)
+    return st
+
+
+def finalize(state: BeamState, lex: Lexicon, lm: BigramLM,
+             cfg: DecoderConfig) -> BeamState:
+    """End-of-utterance: commit pending word-final hypotheses.
+
+    Words are normally committed when the search *extends past* a
+    word-final trie node; the utterance's last word has no such extension
+    step, so hypotheses sitting on a word-final node get their word (and
+    LM score) applied here."""
+    wid = lex.word_id[jnp.maximum(state.node, 0)]
+    pend = (wid >= 0) & (state.node != lex.root)
+    wid_s = jnp.maximum(wid, 0)
+    bonus = cfg.lm_weight * lm.score(state.lm_state, wid_s) + cfg.word_score
+    pb = jnp.where(pend & (state.pb > NEG_INF / 2), state.pb + bonus,
+                   state.pb)
+    pnb = jnp.where(pend & (state.pnb > NEG_INF / 2), state.pnb + bonus,
+                    state.pnb)
+    words = jnp.where(pend[:, None],
+                      _append(state.words, state.n_words, wid_s),
+                      state.words)
+    return state._replace(
+        pb=pb, pnb=pnb, words=words,
+        n_words=jnp.where(pend, state.n_words + 1, state.n_words),
+        lm_state=jnp.where(pend, lm.advance(state.lm_state, wid_s),
+                           state.lm_state),
+        node=jnp.where(pend, lex.root, state.node))
+
+
+def best(state: BeamState) -> dict:
+    i = jnp.argmax(hyp.total_score(state.pb, state.pnb))
+    return {"score": hyp.total_score(state.pb, state.pnb)[i],
+            "words": state.words[i], "n_words": state.n_words[i],
+            "tokens": state.tokens[i], "n_tokens": state.n_tokens[i]}
+
+
+def greedy_decode(log_probs: jax.Array, blank_id: int = 0) -> jax.Array:
+    """Paper's baseline: best token per frame, collapse repeats, drop blanks.
+
+    Returns (T,) int32, -1-padded collapsed token sequence.
+    """
+    ids = jnp.argmax(log_probs, axis=-1).astype(jnp.int32)     # (T,)
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), ids[:-1]])
+    keep = (ids != blank_id) & (ids != prev)
+    T = ids.shape[0]
+    pos = jnp.cumsum(keep) - 1
+    out = jnp.full((T,), -1, jnp.int32)
+    return out.at[jnp.where(keep, pos, T)].set(
+        jnp.where(keep, ids, -1), mode="drop")

@@ -1,0 +1,111 @@
+"""The Hypothesis Unit (paper §3.5), JAX-native.
+
+ASRPU's hypothesis unit is a hardware block that (a) stores hypotheses
+between decoding steps, (b) receives candidate hypotheses from expansion
+threads, (c) merges duplicates (same hash), and (d) sorts + prunes by
+score against the beam threshold.  Here a hypothesis set is a fixed-K
+struct-of-arrays (the 24 KB hypothesis memory maps to fixed K with -inf
+padding); merging is a sort-by-hash + segment-logsumexp; selection is a
+top_k + beam threshold.  The threshold prune itself also exists as a
+Pallas kernel (kernels/beam_prune.py).
+
+Scores are kept as two CTC channels (blank / non-blank); the merge
+logsumexps each channel independently, which is exactly CTC prefix-beam
+merging.  `total = logaddexp(pb, pnb)` orders hypotheses.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class Candidates(NamedTuple):
+    """Flat candidate set produced by one hypothesis-expansion execution."""
+    hash: jax.Array      # (N,) int32 prefix hash (identity for merging)
+    pb: jax.Array        # (N,) f32 log-prob ending in blank
+    pnb: jax.Array       # (N,) f32 log-prob ending in non-blank
+    fields: dict         # str -> (N, ...) programmer-defined payload
+
+
+def total_score(pb: jax.Array, pnb: jax.Array) -> jax.Array:
+    return jnp.logaddexp(pb, pnb)
+
+
+def merge_duplicates(c: Candidates) -> Candidates:
+    """logsumexp-merge candidates with equal hash (same prefix).
+
+    After the merge, one representative per hash keeps the combined
+    channels; the rest drop to -inf.  Payload fields of duplicates are
+    identical by construction (same prefix), so the representative's
+    payload is exact.
+    """
+    n = c.hash.shape[0]
+    valid = total_score(c.pb, c.pnb) > NEG_INF / 2
+    key = jnp.where(valid, c.hash, jnp.int32(2**31 - 1))
+    order = jnp.argsort(key)
+    sk = key[order]
+    seg_start = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    seg_id = jnp.cumsum(seg_start) - 1                       # (N,)
+
+    def seg_lse(x):
+        m = jax.ops.segment_max(x, seg_id, num_segments=n)
+        mx = m[seg_id]
+        s = jax.ops.segment_sum(jnp.exp(x - mx), seg_id, num_segments=n)
+        out = m + jnp.log(jnp.maximum(s, 1e-37))
+        return jnp.where(m > NEG_INF / 2, out, NEG_INF)
+
+    pb_m = seg_lse(c.pb[order])[seg_id]
+    pnb_m = seg_lse(c.pnb[order])[seg_id]
+    keep = seg_start & (sk != 2**31 - 1)
+    pb_new = jnp.where(keep, pb_m, NEG_INF)
+    pnb_new = jnp.where(keep, pnb_m, NEG_INF)
+    inv = jnp.argsort(order)
+    fields = c.fields  # unpermuted; scatter merged scores back
+    return Candidates(c.hash, pb_new[inv], pnb_new[inv], fields)
+
+
+def select(c: Candidates, k: int, beam_threshold: float) -> dict:
+    """Sort + prune: top-k by total score, then beam-threshold prune.
+
+    Returns the new hypothesis set: dict of (k,)-arrays + 'valid' mask.
+    """
+    tot = total_score(c.pb, c.pnb)
+    if k > tot.shape[0]:      # pad candidate set up to the beam size
+        pad = k - tot.shape[0]
+        c = Candidates(
+            jnp.pad(c.hash, (0, pad)),
+            jnp.pad(c.pb, (0, pad), constant_values=NEG_INF),
+            jnp.pad(c.pnb, (0, pad), constant_values=NEG_INF),
+            {n: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+             for n, a in c.fields.items()})
+        tot = total_score(c.pb, c.pnb)
+    top, idx = jax.lax.top_k(tot, k)
+    best = top[0]
+    valid = (top > NEG_INF / 2) & (top >= best - beam_threshold)
+    out = {"hash": c.hash[idx], "pb": c.pb[idx], "pnb": c.pnb[idx],
+           "valid": valid}
+    for name, arr in c.fields.items():
+        out[name] = arr[idx]
+    # invalidate pruned slots
+    out["pb"] = jnp.where(valid, out["pb"], NEG_INF)
+    out["pnb"] = jnp.where(valid, out["pnb"], NEG_INF)
+    return out
+
+
+def hypothesis_unit_step(c: Candidates, k: int, beam_threshold: float,
+                         use_pallas_prune: bool = False) -> dict:
+    """Full hypothesis-unit operation: merge -> sort -> prune."""
+    merged = merge_duplicates(c)
+    if use_pallas_prune:
+        from repro.kernels import ops
+        tot = total_score(merged.pb, merged.pnb)
+        pruned = ops.beam_prune(tot, beam_threshold)
+        merged = Candidates(merged.hash,
+                            jnp.where(pruned > NEG_INF / 2, merged.pb, NEG_INF),
+                            jnp.where(pruned > NEG_INF / 2, merged.pnb, NEG_INF),
+                            merged.fields)
+    return select(merged, k, beam_threshold)

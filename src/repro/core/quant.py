@@ -1,0 +1,40 @@
+"""int8 quantization — the TPU mapping of ASRPU's 8-wide int8 MAC (fp32 acc).
+
+Block-wise symmetric int8 over the last dim (block 128 = MXU lane width).
+Used by: kernels/int8_matmul (weight quantization for serving), optim/adamw
+(8-bit optimizer moments), parallel/compress (gradient compression).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+def quantize(x: jax.Array, block: int = BLOCK) -> dict:
+    """x: (..., D) -> {'q': int8 (..., D), 'scale': f32 (..., D/block)}."""
+    D = x.shape[-1]
+    pad = (-D) % block
+    xf = x.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    nb = xf.shape[-1] // block
+    xb = xf.reshape(*xf.shape[:-1], nb, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0            # (..., nb)
+    q = jnp.round(xb / jnp.maximum(scale[..., None], 1e-12))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    q = q.reshape(*xf.shape[:-1], nb * block)[..., :D]
+    return {"q": q, "scale": scale}
+
+
+def dequantize(qs: dict, block: int = BLOCK) -> jax.Array:
+    q, scale = qs["q"], qs["scale"]
+    D = q.shape[-1]
+    pad = (-D) % block
+    qf = q.astype(jnp.float32)
+    if pad:
+        qf = jnp.pad(qf, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    nb = qf.shape[-1] // block
+    xb = qf.reshape(*qf.shape[:-1], nb, block) * scale[..., None]
+    return xb.reshape(*qf.shape[:-1], nb * block)[..., :D]

@@ -1,0 +1,202 @@
+"""ASRPU runtime: command decoder API + decoding-step scheduler (paper §3).
+
+The accelerator's command set (Table 1) maps 1:1 onto this class:
+
+  ConfigureASR_AcousticScoring  -> configure_acoustic_scoring(kernels)
+  ConfigureASR_HypExpansion     -> configure_hyp_expansion(expand_fn)
+  ConfigureBeamWidth            -> configure_beam_width(beam)
+  DecodingStep                  -> decoding_step(signal_chunk)
+  CleanDecoding                 -> clean_decoding()
+
+Decoding steps (§3.1) run the acoustic-scoring phase (the kernel sequence:
+feature extraction + one kernel per DNN layer) and then the
+hypothesis-expansion phase once per emitted acoustic vector.
+
+Setup threads (§3.2) become the static `StepPlan`: JAX needs static
+shapes, so the per-kernel setup arithmetic — how many outputs are
+producible from buffered inputs, what to retire, how many threads to
+launch — runs at plan time and fixes the steady-state schedule; a step
+whose buffers cannot produce a single output returns early exactly like a
+setup thread returning zero.  The plan doubles as the driver for the
+paper's instruction-count performance model (benchmarks/).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.tds_asr import (ASRPU_HW, DECODER_CONFIG, FEATURE_CONFIG,
+                                   TDS_CONFIG, DecoderConfig, FeatureConfig,
+                                   TDSConfig)
+from repro.core import decoder as dec
+from repro.core import features
+from repro.core.lexicon import BigramLM, Lexicon
+from repro.models import tds
+
+
+@dataclass
+class PlannedKernel:
+    """One kernel execution inside a decoding step (Fig. 6)."""
+    name: str
+    kind: str
+    n_threads: int          # threads launched by the ASR controller
+    n_frames: int           # output frames this step
+    macs_per_thread: int    # inner-loop MACs (setup thread metadata)
+    weight_bytes: int
+    n_subkernels: int
+
+
+@dataclass
+class StepPlan:
+    """Static steady-state decoding-step schedule (the setup threads)."""
+    samples_per_step: int
+    feat_frames_per_step: int
+    acoustic_frames_per_step: int   # hyp-expansion repetitions (Fig. 6)
+    kernels: List[PlannedKernel]
+
+    def total_threads(self) -> int:
+        return sum(k.n_threads for k in self.kernels)
+
+
+def make_step_plan(tds_cfg: TDSConfig = TDS_CONFIG,
+                   feat_cfg: FeatureConfig = FEATURE_CONFIG,
+                   step_ms: float = 80.0, beam_k: int = 128) -> StepPlan:
+    """The setup-thread arithmetic for one steady-state decoding step."""
+    samples = int(feat_cfg.sample_rate * step_ms / 1000)
+    feat_frames = int(step_ms / feat_cfg.shift_ms)          # 8 @ 80ms
+    sub = tds_cfg.total_subsample
+    assert feat_frames % sub == 0, (feat_frames, sub)
+    out_frames = feat_frames // sub
+    kernels = [PlannedKernel(
+        "mfcc", "feature", n_threads=feat_frames, n_frames=feat_frames,
+        macs_per_thread=(feat_cfg.frame_len                  # window+preemph
+                         + feat_cfg.n_fft * int(np.log2(feat_cfg.n_fft))
+                         + (feat_cfg.n_fft // 2 + 1) * feat_cfg.n_mels
+                         + feat_cfg.n_mels * feat_cfg.n_mfcc),
+        weight_bytes=0, n_subkernels=1)]
+    t = feat_frames
+    for spec in tds.build_kernel_specs(tds_cfg):
+        t_out = t // spec.stride
+        if spec.kind == "layernorm":
+            kernels.append(PlannedKernel(
+                spec.name, spec.kind, n_threads=t_out, n_frames=t_out,
+                macs_per_thread=2 * spec.n_out, weight_bytes=0,
+                n_subkernels=1))
+        else:
+            # one thread per output neuron per frame (paper §3.1)
+            kernels.append(PlannedKernel(
+                spec.name, spec.kind, n_threads=t_out * spec.n_out,
+                n_frames=t_out, macs_per_thread=spec.n_in,
+                weight_bytes=spec.weight_bytes,
+                n_subkernels=spec.n_subkernels))
+        t = t_out
+    assert t == out_frames, (t, out_frames)
+    return StepPlan(samples, feat_frames, out_frames, kernels)
+
+
+class ASRPU:
+    """The accelerator, as a streaming decoder object (paper §3/§4)."""
+
+    def __init__(self, hw=ASRPU_HW):
+        self.hw = hw
+        self._tds_cfg: Optional[TDSConfig] = None
+        self._params = None
+        self._feat_cfg = FEATURE_CONFIG
+        self._dec_cfg = DECODER_CONFIG
+        self._lex: Optional[Lexicon] = None
+        self._lm: Optional[BigramLM] = None
+        self._use_int8 = False
+        self.plan: Optional[StepPlan] = None
+        self._jit_step = None
+        self.clean_decoding()
+
+    # ---- configuration commands -------------------------------------
+    def configure_acoustic_scoring(self, tds_cfg: TDSConfig, params,
+                                   feat_cfg: FeatureConfig = FEATURE_CONFIG,
+                                   use_int8: bool = False,
+                                   step_ms: float = 80.0):
+        self._tds_cfg, self._params = tds_cfg, params
+        self._feat_cfg = feat_cfg
+        self._use_int8 = use_int8
+        self.plan = make_step_plan(tds_cfg, feat_cfg, step_ms,
+                                   self._dec_cfg.beam_size)
+        self._build_step()
+
+    def configure_hyp_expansion(self, lex: Lexicon, lm: BigramLM,
+                                dec_cfg: DecoderConfig = DECODER_CONFIG):
+        self._lex, self._lm, self._dec_cfg = lex, lm, dec_cfg
+        if self._tds_cfg is not None:
+            self._build_step()
+
+    def configure_beam_width(self, beam: float):
+        from dataclasses import replace
+        self._dec_cfg = replace(self._dec_cfg, beam_threshold=beam)
+        if self._tds_cfg is not None and self._lex is not None:
+            self._build_step()
+
+    def clean_decoding(self):
+        """Reset hypothesis memory + streaming buffers for a new utterance."""
+        self._sample_buf = np.zeros((0,), np.float32)
+        self._stream_state = None
+        self._beam = None
+        self._n_steps = 0
+
+    # ---- the fused decoding-step program ------------------------------
+    def _build_step(self):
+        if self._lex is None or self._tds_cfg is None:
+            return
+        tds_cfg, feat_cfg = self._tds_cfg, self._feat_cfg
+        dec_cfg, lex, lm = self._dec_cfg, self._lex, self._lm
+        use_int8 = self._use_int8
+        nfr = self.plan.feat_frames_per_step
+
+        def step(params, stream_state, beam_state, samples):
+            feats = features.mfcc(samples, feat_cfg)[:nfr]
+            logp, new_state = tds.forward(params, tds_cfg, feats,
+                                          stream_state, use_int8=use_int8)
+
+            def expand(bs, lp):
+                return dec.expand_step(bs, lp, lex, lm, dec_cfg), None
+            beam_state, _ = jax.lax.scan(expand, beam_state, logp)
+            return new_state, beam_state
+
+        self._jit_step = jax.jit(step)
+
+    # ---- runtime commands ---------------------------------------------
+    def decoding_step(self, signal: np.ndarray):
+        """Append `signal` to the stream and run decoding steps for every
+        full 80ms window available. Returns the current best hypothesis."""
+        assert self._jit_step is not None, "accelerator not configured"
+        self._sample_buf = np.concatenate([self._sample_buf,
+                                           np.asarray(signal, np.float32)])
+        if self._stream_state is None:
+            self._stream_state = tds.init_stream_state(self._tds_cfg)
+            self._beam = dec.init_state(self._dec_cfg.beam_size, self._lm)
+        spp = self.plan.samples_per_step
+        # the MFCC framing needs frame_len-frame_shift lookahead samples
+        look = self._feat_cfg.frame_len - self._feat_cfg.frame_shift
+        while self._sample_buf.shape[0] >= spp + look:
+            chunk = jnp.asarray(self._sample_buf[:spp + look])
+            self._sample_buf = self._sample_buf[spp:]
+            self._stream_state, self._beam = self._jit_step(
+                self._params, self._stream_state, self._beam, chunk)
+            self._n_steps += 1
+        return self.best()
+
+    def best(self, final: bool = False):
+        """Current best hypothesis. final=True commits a pending
+        utterance-final word (call when the utterance is known to end)."""
+        if self._beam is None:
+            return {"words": np.zeros((0,), np.int32), "score": -np.inf}
+        beam = self._beam
+        if final:
+            beam = dec.finalize(beam, self._lex, self._lm, self._dec_cfg)
+        b = dec.best(beam)
+        n = int(b["n_words"])
+        return {"words": np.asarray(b["words"])[:n],
+                "tokens": np.asarray(b["tokens"])[:int(b["n_tokens"])],
+                "score": float(b["score"])}

@@ -1,0 +1,84 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in interpret mode — the kernel
+body runs in Python per grid step, which is how correctness is validated
+against ref.py.  On TPU the same pallas_call compiles to Mosaic.
+
+`int8_matmul(x, w)` takes float tensors and performs the full ASRPU int8
+path: blockless per-row/col symmetric quantization + int8 MXU matmul +
+fp32 rescale (core/quant holds the block-wise variant used by the
+optimizer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (beam_prune as _bp, flash_attention as _fa,
+                           int8_matmul as _im, layernorm as _ln,
+                           logmel as _lm, tds_conv as _tc)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def quantize_rows(x):
+    """Symmetric per-row int8: x (M, K) -> (q i8, scale f32 (M,))."""
+    xf = x.astype(jnp.float32)
+    s = jnp.max(jnp.abs(xf), axis=1) / 127.0
+    q = jnp.clip(jnp.round(xf / jnp.maximum(s[:, None], 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def int8_matmul(x, w, *, bm=128, bn=128, bk=128):
+    """x: (M, K) float; w: (K, N) float -> (M, N) f32 (int8 MXU path)."""
+    xq, xs = quantize_rows(x)
+    wq_t, ws = quantize_rows(w.T)          # per-output-channel scales
+    wq = wq_t.T
+    M, K = xq.shape
+    N = wq.shape[1]
+    pad_m, pad_n, pad_k = (-M) % 8, (-N) % 128, (-K) % 128
+    if pad_m or pad_k:
+        xq = jnp.pad(xq, ((0, pad_m), (0, pad_k)))
+        xs = jnp.pad(xs, (0, pad_m))
+    if pad_n or pad_k:
+        wq = jnp.pad(wq, ((0, pad_k), (0, pad_n)))
+        ws = jnp.pad(ws, (0, pad_n))
+    bm_ = min(bm, xq.shape[0])
+    while xq.shape[0] % bm_:
+        bm_ //= 2
+    out = _im.int8_matmul_pallas(xq, wq, xs, ws, bm=bm_, bn=bn, bk=bk,
+                                 interpret=_interpret())
+    return out[:M, :N]
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=128, block_kv=128):
+    return _fa.flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_kv=block_kv,
+                                      interpret=_interpret())
+
+
+def layernorm(x, scale, bias, *, eps=1e-5):
+    return _ln.norm_pallas(x, scale, bias, kind="layernorm", eps=eps,
+                           interpret=_interpret())
+
+
+def rmsnorm(x, scale, *, eps=1e-6):
+    return _ln.norm_pallas(x, scale, None, kind="rmsnorm", eps=eps,
+                           interpret=_interpret())
+
+
+def logmel(power, fb, dct):
+    return _lm.logmel_pallas(power, fb, dct, interpret=_interpret())
+
+
+def beam_prune(scores, beam):
+    return _bp.beam_prune_pallas(scores, beam, interpret=_interpret())
+
+
+def tds_conv(x, w, b, *, stride=1):
+    return _tc.tds_conv_pallas(x, w, b, stride=stride,
+                               interpret=_interpret())

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Each function is the semantic ground truth its kernel is allclose-tested
+against (tests/test_kernels.py sweeps shapes + dtypes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MASK = -1e30
+
+
+def int8_matmul(xq, wq, xs, ws):
+    """xq: (M,K) i8, wq: (K,N) i8, xs: (M,) f32, ws: (N,) f32 -> (M,N) f32.
+
+    int8 x int8 -> int32 accumulate (the MXU path), then per-row/col scales
+    — ASRPU's 8-wide int8 MAC with fp32 accumulation, MXU-sized.
+    """
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * xs[:, None] * ws[None, :]
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B,H,Sq,D); k,v: (B,H,Skv,D) (GQA pre-expanded). f32 softmax."""
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    kpos = jnp.arange(Skv)[None, :]
+    m = jnp.ones((Sq, Skv), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= (qpos - kpos) < window
+    s = jnp.where(m[None, None], s, MASK)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    """x: (T, D) any float dtype; f32 statistics."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def logmel(power, fb, dct):
+    """power: (T,F) f32, fb: (F,M), dct: (M,C) -> (T,C) MFCC tail."""
+    return jnp.log(jnp.maximum(power @ fb, 1e-10)) @ dct
+
+
+def beam_prune(scores, beam, mask_value=MASK):
+    """scores: (N,) f32 -> scores with entries < max - beam set to MASK."""
+    best = jnp.max(scores)
+    return jnp.where(scores >= best - beam, scores, mask_value)
+
+
+def tds_conv(x, w, b, stride=1):
+    """Causal strided time conv. x: (T_pad, W, Cin) already left-padded by
+    k-1; w: (k, Cin, Cout); returns (T_out, W, Cout) with
+    T_out = (T_pad - k + 1 + stride - 1) // stride ... callers pass
+    T_pad = k - 1 + T_in with T_in % stride == 0, giving T_in // stride."""
+    k = w.shape[0]
+    T_in = x.shape[0] - (k - 1)
+    t_out = T_in // stride
+    off = (jnp.arange(t_out) * stride)[:, None] + jnp.arange(k)[None, :]
+    win = x[off]                                    # (t_out, k, W, Cin)
+    return jnp.einsum("tkwc,kcd->twd", win, w) + b

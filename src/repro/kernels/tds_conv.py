@@ -1,0 +1,68 @@
+"""TDS time-convolution Pallas kernel (causal, strided).
+
+The conv kernels of the acoustic-scoring phase (paper §4.2).  Input blocks
+overlap by the (k-1)-frame left halo — the BlockSpec index_map strides by
+the un-haloed tile so each grid step sees its context, exactly like the
+shared-memory input windows the ASRPU setup threads retain between
+kernels.  Channel mixing is per-w-column (k taps of (Cin x Cout) matmuls
+on the MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, k, stride, bt, W, Cin, Cout):
+    # x_ref holds the whole padded input (ASRPU keeps conv inputs resident
+    # in shared memory between kernels; TDS inputs are small enough that
+    # the VMEM analogue is exact).  Each grid step produces a bt-row tile.
+    i = pl.program_id(0)
+    x = x_ref[...]                       # (Tp, W*Cin)
+    w = w_ref[...]                       # (k, Cin, Cout)
+    start = i * bt * stride
+    acc = jnp.zeros((bt * W, Cout), jnp.float32)
+    for j in range(k):
+        xj = jax.lax.dynamic_slice_in_dim(x, start + j, bt * stride, axis=0)
+        if stride > 1:
+            xj = xj.reshape(bt, stride, W * Cin)[:, 0]
+        xj = xj.reshape(bt * W, Cin)
+        acc += jax.lax.dot(xj.astype(jnp.float32),
+                           w[j].astype(jnp.float32))
+    acc = acc.reshape(bt, W, Cout) + b_ref[...][None, None, :]
+    o_ref[...] = acc.reshape(bt, W * Cout)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "bt", "interpret"))
+def tds_conv_pallas(x, w, b, *, stride=1, bt=32, interpret=False):
+    """x: (k-1+T, W, Cin) left-padded input; w: (k, Cin, Cout); b: (Cout,).
+
+    Returns (T // stride, W, Cout), matching ref.tds_conv.  Output t
+    consumes x[t*stride : t*stride + k] (causal window ending at
+    t*stride + k - 1 in padded coords).
+    """
+    k, Cin, Cout = w.shape
+    Tp, W, _ = x.shape
+    T = Tp - (k - 1)
+    assert T % stride == 0
+    t_out = T // stride
+    bt = min(bt, t_out)
+    assert t_out % bt == 0, (t_out, bt)
+    xf = x.reshape(Tp, W * Cin)
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k, stride=stride, bt=bt, W=W,
+                          Cin=Cin, Cout=Cout),
+        grid=(t_out // bt,),
+        in_specs=[
+            pl.BlockSpec((Tp, W * Cin), lambda i: (0, 0)),
+            pl.BlockSpec((k, Cin, Cout), lambda i: (0, 0, 0)),
+            pl.BlockSpec((Cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, W * Cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_out, W * Cout), jnp.float32),
+        interpret=interpret,
+    )(xf, w, b)
+    return out.reshape(t_out, W, Cout)

@@ -1,0 +1,165 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); 512 placeholder host devices back the production
+meshes.  Nothing here allocates device memory: all inputs are
+ShapeDtypeStructs and we stop at .lower().compile().
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi_pod
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, LM_SHAPES, get_config
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             save: bool = True, extra: dict | None = None,
+             baseline: bool = False) -> dict:
+    if baseline:
+        os.environ["REPRO_BASELINE"] = "1"
+        mesh_name_out = mesh_name + "_baseline"
+    else:
+        os.environ.pop("REPRO_BASELINE", None)
+        mesh_name_out = mesh_name
+    cfg = get_config(arch)
+    shape = {s.name: s for s in LM_SHAPES}[shape_name]
+    if shape in cfg.skipped_shapes():
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name_out,
+               "status": "skipped",
+               "reason": "full-attention arch; long_500k requires "
+                         "sub-quadratic attention (see DESIGN.md)"}
+        if save:
+            _save(rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi_pod"))
+    n_dev = mesh.size
+    t0 = time.time()
+    try:
+        jfn, args = build_cell(cfg, shape, mesh)
+        with mesh:
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text()
+            roof = rl.analyze(compiled, n_dev, rl.model_flops(cfg, shape),
+                              hlo_text=hlo)
+            from repro.launch import hlo_cost as _hc
+            coll = dict(_hc.analyze_hlo(hlo, n_dev).coll)
+            coll["total"] = sum(coll.values())
+            coll["counts"] = {}
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name_out,
+            "status": "ok", "n_devices": n_dev,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory_analysis": _mem_dict(mem),
+            "roofline": roof.asdict(),
+            "collectives": {k: v for k, v in coll.items() if k != "counts"},
+            "collective_counts": coll["counts"],
+        }
+    except Exception as e:  # a failure here is a bug in our sharding
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name_out,
+               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    if extra:
+        rec.update(extra)
+    if save:
+        _save(rec)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, f, None)
+        if v is not None:
+            out[f] = int(v)
+    if out:
+        out["total_hbm_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def _save(rec: dict):
+    ART.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    (ART / name).write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default=None,
+                    choices=[None, "single_pod", "multi_pod"])
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="disable hillclimb layout optimizations; saves "
+                         "to *_<mesh>_baseline.json")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in LM_SHAPES]
+    meshes = [args.mesh] if args.mesh else ["single_pod", "multi_pod"]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                out = ART / f"{arch}__{shape}__{mesh}.json"
+                if args.skip_existing and out.exists():
+                    old = json.loads(out.read_text())
+                    if old.get("status") in ("ok", "skipped"):
+                        print(f"[skip-existing] {arch} {shape} {mesh}")
+                        continue
+                t0 = time.time()
+                rec = run_cell(arch, shape, mesh, baseline=args.baseline)
+                dt = time.time() - t0
+                status = rec["status"]
+                n_fail += status == "FAIL"
+                msg = f"[{status}] {arch} {shape} {mesh} ({dt:.0f}s)"
+                if status == "ok":
+                    r = rec["roofline"]
+                    hbm = rec["memory_analysis"].get(
+                        "total_hbm_bytes_per_device", 0) / 2**30
+                    msg += (f" bottleneck={r['bottleneck']}"
+                            f" t=({r['t_compute']:.3f},{r['t_memory']:.3f},"
+                            f"{r['t_collective']:.3f})s hbm={hbm:.2f}GiB")
+                elif status == "FAIL":
+                    msg += " " + rec["error"][:300]
+                print(msg, flush=True)
+    print(f"done. failures={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

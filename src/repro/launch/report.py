@@ -1,0 +1,82 @@
+"""Render EXPERIMENTS.md tables from artifacts/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.report            # markdown tables
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def load(mesh: str):
+    out = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def fmt_table(mesh: str) -> str:
+    rows = [
+        "| arch | shape | HBM/dev | t_comp (s) | t_mem (s) | t_coll (s) | "
+        "bound | roofline frac | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load(mesh):
+        name = f"| {rec['arch']} | {rec['shape']} "
+        if rec["status"] == "skipped":
+            rows.append(name + "| — | — | — | — | skipped (full attention; "
+                        "long_500k needs sub-quadratic) | — | — |")
+            continue
+        if rec["status"] != "ok":
+            rows.append(name + f"| FAIL: {rec.get('error','')[:60]} |")
+            continue
+        r = rec["roofline"]
+        hbm = rec["memory_analysis"].get("total_hbm_bytes_per_device", 0) / 2**30
+        tmax = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        frac = r["t_compute"] / tmax if tmax else 0.0
+        rows.append(
+            name + f"| {hbm:.2f} GiB | {r['t_compute']:.4f} | "
+            f"{r['t_memory']:.4f} | {r['t_collective']:.4f} | "
+            f"{r['bottleneck']} | {frac:.3f} | {r['useful_ratio']:.3f} |")
+    return "\n".join(rows)
+
+
+def perf_comparison() -> str:
+    """Baseline vs optimized for the hillclimb cells."""
+    rows = ["| cell | variant | t_comp | t_mem | t_coll | HBM/dev |",
+            "|---|---|---|---|---|---|"]
+    for f in sorted(ART.glob("*__single_pod_baseline.json")):
+        base = json.loads(f.read_text())
+        opt_f = ART / f.name.replace("_baseline", "")
+        if not opt_f.exists():
+            continue
+        opt = json.loads(opt_f.read_text())
+        for tag, rec in (("baseline", base), ("optimized", opt)):
+            if rec["status"] != "ok":
+                continue
+            r = rec["roofline"]
+            hbm = rec["memory_analysis"].get(
+                "total_hbm_bytes_per_device", 0) / 2**30
+            rows.append(
+                f"| {rec['arch']} × {rec['shape']} | {tag} | "
+                f"{r['t_compute']:.2f} | {r['t_memory']:.2f} | "
+                f"{r['t_collective']:.2f} | {hbm:.1f} GiB |")
+    return "\n".join(rows)
+
+
+def summary():
+    for mesh in ("single_pod", "multi_pod"):
+        recs = load(mesh)
+        ok = [r for r in recs if r["status"] == "ok"]
+        print(f"\n## {mesh}: {len(ok)} ok / "
+              f"{sum(r['status']=='skipped' for r in recs)} skipped / "
+              f"{sum(r['status']=='FAIL' for r in recs)} fail\n")
+        print(fmt_table(mesh))
+    print("\n## §Perf baseline vs optimized (hillclimb cells)\n")
+    print(perf_comparison())
+
+
+if __name__ == "__main__":
+    summary()

@@ -1,0 +1,166 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+TPU v5e constants (per chip):
+  peak bf16 compute : 197 TFLOP/s
+  HBM bandwidth     : 819 GB/s
+  ICI               : ~50 GB/s per link
+
+Conventions (documented in EXPERIMENTS.md):
+  * `compiled.cost_analysis()` on an SPMD-partitioned executable reports
+    the *per-device* program; we record per-device FLOPs/bytes and derive
+    terms as per-device quantity / per-chip peak (equivalent to the
+    global/(chips*peak) formulation).
+  * collective bytes: the post-SPMD HLO is parsed; for each all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute we take
+    the per-device output tensor bytes times a ring-algorithm wire factor
+    ((n-1)/n for AG/RS, 2(n-1)/n for AR with n = devices in the replica
+    group when parseable, else the mesh size; 1.0 for A2A/permute).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[^\]]*\][^ )]*)(?:,\s*[a-z0-9]+\[[^\]]*\][^ )]*)*)\s*(?:\))?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, default_group: int) -> dict:
+    """Per-device wire bytes by collective kind."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        sig, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(sig)
+        # replica group size from the full op line
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        n = default_group
+        gm = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            n = int(gm.group(2))
+        else:
+            gm = _GROUPS_RE.search(line)
+            if gm and gm.group(1).strip():
+                first = gm.group(1).split("}")[0].strip("{} ")
+                n = max(1, len([t for t in first.split(",") if t.strip()]))
+        if n <= 1:
+            continue
+        ring = (n - 1) / n
+        factor = {"all-gather": ring, "reduce-scatter": ring,
+                  "all-reduce": 2 * ring, "all-to-all": ring,
+                  "collective-permute": 1.0}[kind]
+        out[kind] += nbytes * factor
+        counts[kind] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float          # global useful FLOPs (6ND / 2ND)
+    hlo_flops_global: float
+    useful_ratio: float
+    peak_bytes_per_device: float = 0.0
+
+    def asdict(self):
+        return asdict(self)
+
+
+def analyze(compiled, n_devices: int, model_flops: float,
+            hlo_text: str | None = None) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    Primary source is the loop-corrected HLO walker (launch/hlo_cost.py):
+    XLA's cost_analysis counts while bodies once, which undercounts
+    scanned-layer programs by the trip count.  The raw cost_analysis
+    numbers are kept in the record for reference.
+    """
+    from repro.launch import hlo_cost
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = hlo_cost.analyze_hlo(text, n_devices)
+    flops = cost.flops
+    byts = cost.bytes
+    coll = dict(cost.coll)
+    coll["total"] = cost.coll_total
+    coll["counts"] = {}
+    coll["raw_cost_analysis_flops"] = float(ca.get("flops", 0.0))
+    coll["raw_cost_analysis_bytes"] = float(ca.get("bytes accessed", 0.0))
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = coll["total"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    peak_bytes = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak_bytes = float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    hlo_global = flops * n_devices
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=coll["total"],
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        hlo_flops_global=hlo_global,
+        useful_ratio=model_flops / hlo_global if hlo_global else 0.0,
+        peak_bytes_per_device=peak_bytes,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs per step: 6·N_active·tokens (train), 2·N_active·tokens
+    (prefill), 2·N_active·batch (decode; one token per sequence)."""
+    n_active = cfg.param_counts()["active"]
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,158 @@
+"""Serving launcher — batched request decoding, ASRPU-style decoding steps.
+
+Two modes:
+  * --mode lm  : batched LM serving for any --arch (tiny configs on CPU):
+                 slot-based continuous batching — a fixed (batch, cache)
+                 pool; finished sequences free their slot for queued
+                 requests; every serve step is one fused decode_step.
+  * --mode asr : the paper's system — streaming ASR through the ASRPU
+                 command API (configure -> DecodingStep* -> CleanDecoding).
+
+  PYTHONPATH=src python -m repro.launch.serve --mode asr --utterances 3
+  PYTHONPATH=src python -m repro.launch.serve --mode lm --arch mamba2-1.3b \
+      --requests 8 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import build_lm
+
+
+def serve_lm(args):
+    cfg = get_config(args.arch).tiny()
+    lm = build_lm(cfg, None)
+    params = lm.init(jax.random.PRNGKey(0))
+    B = args.slots
+    cache_len = args.prompt_len + args.max_new
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, args.prompt_len)
+               for _ in range(args.requests)]
+
+    # slot pool
+    queue = list(enumerate(prompts))
+    active = {}           # slot -> (request_id, generated list, remaining)
+    outputs = {}
+    cache = lm.init_cache(B, cache_len)
+    tokens = jnp.zeros((B, 1), jnp.int32)
+
+    jit_decode = jax.jit(lm.decode_step)
+    jit_prefill = jax.jit(lm.prefill)
+
+    # simple admission: prefill each request individually into its slot
+    # (a production server batches prefills; slot writes are exact here)
+    def admit(slot, rid, prompt):
+        nonlocal cache, tokens
+        logits, pc = jit_prefill(params, {"tokens": jnp.asarray(prompt)[None]})
+        for name in ("k", "v"):
+            pass
+        # write prompt KV into the pooled cache at this slot
+        def put(dst, src):
+            if dst.ndim >= 3 and src.shape[2] <= dst.shape[2]:
+                return dst.at[:, slot:slot+1, :src.shape[2]].set(
+                    src.astype(dst.dtype))
+            return dst.at[:, slot:slot+1].set(src.astype(dst.dtype))
+        cache["layers"] = jax.tree.map(put, cache["layers"], pc["layers"])
+        cache["kpos"] = jnp.maximum(cache["kpos"],
+                                    jnp.arange(cache_len) *
+                                    (jnp.arange(cache_len) < args.prompt_len))
+        cache["kpos"] = cache["kpos"].at[:args.prompt_len].set(
+            jnp.arange(args.prompt_len))
+        cache["offset"] = jnp.full((), args.prompt_len, jnp.int32)
+        first = int(jnp.argmax(logits[0, :cfg.vocab_size]))
+        tokens = tokens.at[slot, 0].set(first)
+        active[slot] = (rid, [first], args.max_new - 1)
+
+    t0 = time.time()
+    n_steps = 0
+    while queue or active:
+        for slot in range(B):
+            if slot not in active and queue:
+                rid, prompt = queue.pop(0)
+                admit(slot, rid, prompt)
+        _, tok, cache = jit_decode(params, cache, {"tokens": tokens})
+        n_steps += 1
+        tokens = tok[:, None]
+        done = []
+        for slot, (rid, gen, rem) in active.items():
+            gen.append(int(tok[slot]))
+            rem -= 1
+            active[slot] = (rid, gen, rem)
+            if rem <= 0:
+                outputs[rid] = gen
+                done.append(slot)
+        for slot in done:
+            del active[slot]
+    dt = time.time() - t0
+    total_tokens = sum(len(v) for v in outputs.values())
+    print(f"served {len(outputs)} requests, {total_tokens} tokens, "
+          f"{n_steps} decode steps in {dt:.2f}s "
+          f"({total_tokens/dt:.1f} tok/s)")
+    return outputs
+
+
+def serve_asr(args):
+    from repro.configs.tds_asr import (DECODER_CONFIG, FEATURE_CONFIG,
+                                       TDSConfig, TDSStage)
+    from repro.core import lexicon as lx
+    from repro.core.scheduler import ASRPU
+    from repro.data.pipeline import SyntheticASR
+    from repro.models import tds
+
+    # small TDS so it runs fast on CPU; same kernel structure
+    tds_cfg = TDSConfig(
+        stages=(TDSStage(1, 4, 80, 9, 2), TDSStage(1, 4, 80, 9, 2),
+                TDSStage(1, 6, 80, 9, 2)),
+        vocab_size=32)
+    words = {f"w{i}": [1 + (i * 3 + j) % 30 for j in range(2 + i % 3)]
+             for i in range(12)}
+    lex = lx.build_lexicon(words, max_children=16)
+    lm = lx.uniform_bigram(len(words))
+
+    params = tds.init_tds(jax.random.PRNGKey(0), tds_cfg)
+    asrpu = ASRPU()
+    asrpu.configure_acoustic_scoring(tds_cfg, params)
+    asrpu.configure_hyp_expansion(lex, lm, DECODER_CONFIG)
+    asrpu.configure_beam_width(25.0)
+
+    data = SyntheticASR(words)
+    spp = asrpu.plan.samples_per_step
+    for u in range(args.utterances):
+        utt = data.utterance(u)
+        asrpu.clean_decoding()
+        t0 = time.time()
+        audio = utt["audio"]
+        # stream in 80ms chunks — one DecodingStep command per chunk
+        for off in range(0, len(audio), spp):
+            best = asrpu.decoding_step(audio[off:off + spp])
+        dt = time.time() - t0
+        rtf = dt / (len(audio) / 16000)
+        print(f"utt {u}: {len(audio)/16000:.2f}s audio, decoded in {dt:.2f}s "
+              f"(RTF {rtf:.2f}), steps={asrpu._n_steps}, "
+              f"best words={best['words'].tolist()} score={best['score']:.2f} "
+              f"(ref={utt['words'].tolist()})")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="asr", choices=["lm", "asr"])
+    ap.add_argument("--arch", default="mamba2-1.3b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--utterances", type=int, default=2)
+    args = ap.parse_args(argv)
+    if args.mode == "lm":
+        return serve_lm(args)
+    return serve_asr(args)
+
+
+if __name__ == "__main__":
+    main()

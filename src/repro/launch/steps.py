@@ -1,0 +1,233 @@
+"""Step builders: jitted train_step / prefill / decode with full shardings.
+
+These are what both the real launchers (train.py / serve.py) and the
+multi-pod dry-run (dryrun.py) lower — one source of truth for the
+production computation + sharding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.transformer import LM
+from repro.optim import adamw
+from repro.parallel import sharding as shlib
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Model inputs for one workload cell, as ShapeDtypeStructs.
+
+    train/prefill: full (B, S); decode: one new token (B, 1) —
+    the KV/SSM cache is a separate argument (see cache_specs).
+    [audio]/[vlm] archs get precomputed frame/patch embeddings (stub
+    frontend per brief) instead of token ids.
+    """
+    B = shape.global_batch
+    S = 1 if shape.is_decode else shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {}
+    if cfg.embed_inputs:
+        batch["tokens"] = sds((B, S), jnp.int32)
+    else:
+        batch["embeds"] = sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    if shape.kind == "train":
+        batch["labels"] = sds((B, S), jnp.int32)
+    return batch
+
+
+def cache_specs(lm: LM, shape: ShapeSpec):
+    return jax.eval_shape(
+        functools.partial(lm.init_cache, shape.global_batch, shape.seq_len))
+
+
+def opt_shardings(param_sharding_tree):
+    """Moment trees share the parameter sharding; int8 scale blocks too
+    (same spec with the last dim replicated is handled by the safety net
+    in the rules — here moments are same-shape so specs transfer 1:1)."""
+    def f(ps):
+        return ps
+    return {"m": jax.tree.map(f, param_sharding_tree),
+            "v": jax.tree.map(f, param_sharding_tree),
+            "count": None}
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+def build_lm(cfg: ModelConfig, mesh: Optional[Mesh]) -> LM:
+    return LM(cfg, shlib.Sharder(mesh))
+
+
+def make_train_step(lm: LM, opt_cfg: adamw.AdamWConfig, *, remat=True,
+                    accum: int = 1, accum_dtype=jnp.float32):
+    """accum > 1: microbatched gradient accumulation (scan over accum
+    microbatches; grad buffer in parameter sharding).  Divides the
+    per-step activation-residual footprint by `accum` at equal FLOPs.
+    accum_dtype=bf16 halves the buffer for >100B-param models (the fp32
+    buffer alone is 12 GB/dev for llama4-400b on 256 chips)."""
+    def train_step(state, batch):
+        if accum == 1:
+            def lf(p):
+                return lm.loss_fn(p, batch, remat=remat)
+            (_, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+                state["params"])
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((accum, a.shape[0] // accum)
+                                    + a.shape[1:]), batch)
+
+            def mstep(gsum, b):
+                def lf(p):
+                    return lm.loss_fn(p, b, remat=remat)
+                (_, met), g = jax.value_and_grad(lf, has_aux=True)(
+                    state["params"])
+                gsum = jax.tree.map(
+                    lambda s, x: s + x.astype(accum_dtype), gsum, g)
+                return gsum, met
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              state["params"])
+            grads, mets = jax.lax.scan(mstep, g0, mb)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m[-1], mets)
+        new_p, new_opt = adamw.update(grads, state["opt"], state["params"],
+                                      opt_cfg)
+        metrics = dict(metrics, step=state["step"] + 1)
+        return {"params": new_p, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+    return train_step
+
+
+def make_prefill(lm: LM):
+    def prefill(params, batch):
+        return lm.prefill(params, batch)
+    return prefill
+
+
+def make_decode_step(lm: LM):
+    def decode_step(params, cache, batch):
+        logits, tok, new_cache = lm.decode_step(params, cache, batch)
+        return tok, new_cache
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# jitted + sharded assembly for one (cfg, shape, mesh) cell
+# ---------------------------------------------------------------------------
+def default_accum(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Microbatching policy for the production cells: accumulate just
+    enough that the residual stack fits v5e HBM (16 GB/chip).  Every
+    extra microbatch re-pays the ZeRO-3/FSDP weight all-gathers (the
+    dominant collective term for big dense trains), so this is minimized,
+    not maximized."""
+    if shape.kind != "train":
+        return 1
+    n = cfg.param_counts()["total"]
+    if n > 100e9:
+        return 8          # llama4-class: capacity-floor cells (see §Perf)
+    if cfg.moe is not None or n > 60e9:
+        return 4          # accum=2 overruns HBM for 72b (18.3 GiB, §Perf)
+    if n > 20e9:
+        return 2
+    return 1
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
+               opt_cfg: Optional[adamw.AdamWConfig] = None, remat=True,
+               accum: Optional[int] = None):
+    """Returns (jitted_fn, abstract_args) ready to .lower(*abstract_args)."""
+    lm = build_lm(cfg, mesh)
+    p_shapes = lm.param_shapes()
+    p_sh = shlib.param_shardings(cfg, p_shapes, mesh)
+    batch_shapes = input_specs(cfg, shape)
+    b_sh = shlib.batch_shardings(batch_shapes, mesh)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        if opt_cfg is None:
+            # int8 moments for very large models (fits HBM), fp32 otherwise
+            big = cfg.param_counts()["total"] > 100e9
+            opt_cfg = adamw.AdamWConfig(
+                moment_dtype="int8" if big else "float32")
+        opt_shapes = jax.eval_shape(
+            functools.partial(adamw.init, cfg=opt_cfg), p_shapes)
+        o_sh = _opt_shardings_like(cfg, opt_shapes, mesh)
+        state_shapes = {"params": p_shapes, "opt": opt_shapes,
+                        "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        state_sh = {"params": p_sh, "opt": o_sh, "step": repl}
+        if accum is None:
+            accum = default_accum(cfg, shape)
+        accum_dtype = (jnp.bfloat16 if cfg.param_counts()["total"] > 100e9
+                       else jnp.float32)
+        fn = make_train_step(build_lm(cfg, mesh), opt_cfg, remat=remat,
+                             accum=accum, accum_dtype=accum_dtype)
+        jfn = jax.jit(fn, in_shardings=(state_sh, b_sh),
+                      out_shardings=(state_sh, None), donate_argnums=(0,))
+        return jfn, (state_shapes, batch_shapes)
+
+    # serving cells run on int8 weights (the paper's 8-bit MAC serving
+    # story): 4x less HBM residency and 4x less FSDP-gather wire
+    import os
+    from repro.models import layers as L
+    int8_serving = os.environ.get("REPRO_BASELINE", "0") != "1"
+    if int8_serving:
+        p_shapes = jax.eval_shape(L.quantize_params_for_serving, p_shapes)
+        p_sh = shlib.param_shardings(cfg, p_shapes, mesh)
+
+    if shape.kind == "prefill":
+        c_shapes = jax.eval_shape(
+            functools.partial(lm.init_cache, shape.global_batch,
+                              shape.seq_len))
+        c_sh = shlib.cache_shardings(cfg, c_shapes, mesh, shape.global_batch)
+        fn = make_prefill(lm)
+        jfn = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                      out_shardings=(repl, c_sh))
+        return jfn, (p_shapes, batch_shapes)
+
+    # decode
+    c_shapes = cache_specs(lm, shape)
+    c_sh = shlib.cache_shardings(cfg, c_shapes, mesh, shape.global_batch)
+    fn = make_decode_step(lm)
+    jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh),
+                  out_shardings=(None, c_sh), donate_argnums=(1,))
+    return jfn, (p_shapes, c_shapes, batch_shapes)
+
+
+def _opt_shardings_like(cfg, opt_shapes, mesh):
+    """Sharding tree for adamw state: moments inherit parameter rules by
+    path (the 'm'/'v' prefix and any trailing 'q'/'scale' are stripped)."""
+    from jax.tree_util import tree_map_with_path
+
+    def f(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path]
+        if names and names[0] in ("m", "v"):
+            names = names[1:]
+        if names and names[-1] in ("q", "scale") and leaf.ndim >= 1:
+            # int8 moment payload/scale: payload shares param spec; scale
+            # shares it with the last dim replicated (handled by safety net)
+            core = names[:-1]
+        else:
+            core = names
+        spec = shlib._param_rule(_FakePath(core), leaf.shape, cfg, mesh) \
+            if core else P()
+        return NamedSharding(mesh, spec)
+    return tree_map_with_path(f, opt_shapes)
+
+
+class _FakePath(tuple):
+    """List of objects exposing .key so _param_rule can consume plain names."""
+    def __new__(cls, names):
+        return super().__new__(cls, [_K(n) for n in names])
+
+
+class _K:
+    def __init__(self, key):
+        self.key = key

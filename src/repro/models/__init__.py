@@ -1,0 +1,1 @@
+from repro.models.transformer import LM, pad_vocab

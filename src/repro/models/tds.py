@@ -1,0 +1,215 @@
+"""TDS acoustic model (paper §4.2) as an explicit ASRPU kernel sequence.
+
+The paper implements the wav2letter TDS network as a sequence of 79
+kernels: 18 CONV, 29 FC, 32 LayerNorm (each with its setup thread).  This
+module builds exactly that kernel list — the list is both the executable
+model (offline + streaming, causal convs with carried left context) and
+the artifact the evaluation reproduces (Fig. 9 layer sizes, Fig. 11
+per-kernel times via the instruction-count model).
+
+Views follow TDS: activations are (T, w, c) "2-D" maps; convs are
+time-only (kernel k x 1) with full c x c channel mixing; FC blocks operate
+on the flattened (w*c) vector.  All convs are causal so streaming
+decoding steps produce bit-identical outputs to offline decoding
+(property-tested).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.tds_asr import TDSConfig
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """One ASRPU kernel (paper §3.1): name, kind, and the setup-thread
+    metadata needed by the controller and the performance model."""
+    name: str
+    kind: str              # conv | fc | layernorm | head
+    n_in: int              # inputs per output neuron (MACs) — 0 for LN
+    n_out: int             # neurons == kernel threads per output frame
+    kernel: int = 1        # time-kernel width (convs)
+    stride: int = 1
+    weight_bytes: int = 0  # int8 weight footprint (model-memory residency)
+    residual: bool = False
+    activation: str = "none"   # relu | none
+
+    @property
+    def n_subkernels(self) -> int:
+        """FC layers are partitioned into <=1MB sub-kernels (paper §5.2)."""
+        limit = 1 << 20
+        return max(1, -(-self.weight_bytes // limit))
+
+
+def build_kernel_specs(cfg: TDSConfig) -> List[KernelSpec]:
+    specs: List[KernelSpec] = []
+    w = cfg.stages[0].feat
+    c_prev = 1
+    c0 = cfg.stages[0].channels
+    # front conv (stride 1)
+    specs.append(KernelSpec("front_conv", "conv", n_in=cfg.stages[0].kernel * c_prev,
+                            n_out=w * c0, kernel=cfg.stages[0].kernel,
+                            weight_bytes=cfg.stages[0].kernel * c_prev * c0,
+                            activation="relu"))
+    c_prev = c0
+    for si, st in enumerate(cfg.stages):
+        # stage-entry subsampling conv + LN
+        specs.append(KernelSpec(
+            f"s{si}_subsample", "conv", n_in=cfg.sub_kernel * c_prev,
+            n_out=w * st.channels, kernel=cfg.sub_kernel, stride=st.subsample,
+            weight_bytes=cfg.sub_kernel * c_prev * st.channels,
+            activation="relu"))
+        specs.append(KernelSpec(f"s{si}_sub_ln", "layernorm", 0,
+                                w * st.channels))
+        width = w * st.channels
+        for b in range(st.n_blocks):
+            specs.append(KernelSpec(
+                f"s{si}b{b}_conv", "conv", n_in=st.kernel * st.channels,
+                n_out=width, kernel=st.kernel,
+                weight_bytes=st.kernel * st.channels * st.channels,
+                residual=True, activation="relu"))
+            specs.append(KernelSpec(f"s{si}b{b}_ln1", "layernorm", 0, width))
+            specs.append(KernelSpec(
+                f"s{si}b{b}_fc1", "fc", n_in=width, n_out=width,
+                weight_bytes=width * width, activation="relu"))
+            specs.append(KernelSpec(
+                f"s{si}b{b}_fc2", "fc", n_in=width, n_out=width,
+                weight_bytes=width * width, residual=True))
+            specs.append(KernelSpec(f"s{si}b{b}_ln2", "layernorm", 0, width))
+        c_prev = st.channels
+    width = w * cfg.stages[-1].channels
+    specs.append(KernelSpec("final_ln", "layernorm", 0, width))
+    specs.append(KernelSpec("head", "fc", n_in=width, n_out=cfg.vocab_size,
+                            weight_bytes=width * cfg.vocab_size))
+    return specs
+
+
+def kernel_census(cfg: TDSConfig) -> dict:
+    specs = build_kernel_specs(cfg)
+    return {
+        "conv": sum(s.kind == "conv" for s in specs),
+        "fc": sum(s.kind in ("fc", "head") for s in specs),
+        "layernorm": sum(s.kind == "layernorm" for s in specs),
+    }
+
+
+# ---------------------------------------------------------------------------
+# parameters + forward
+# ---------------------------------------------------------------------------
+def init_tds(key, cfg: TDSConfig, dtype=jnp.float32) -> dict:
+    params = {}
+    for spec in build_kernel_specs(cfg):
+        key, k = jax.random.split(key)
+        if spec.kind == "layernorm":
+            params[spec.name] = {"scale": jnp.ones((spec.n_out,), jnp.float32),
+                                 "bias": jnp.zeros((spec.n_out,), jnp.float32)}
+        elif spec.kind == "conv":
+            c_out = spec.n_out // cfg.stages[0].feat
+            c_in = spec.n_in // spec.kernel
+            std = 1.0 / math.sqrt(spec.n_in)
+            params[spec.name] = {
+                "w": (jax.random.normal(k, (spec.kernel, c_in, c_out),
+                                        jnp.float32) * std).astype(dtype),
+                "b": jnp.zeros((c_out,), dtype)}
+        else:
+            std = 1.0 / math.sqrt(spec.n_in)
+            params[spec.name] = {
+                "w": (jax.random.normal(k, (spec.n_in, spec.n_out),
+                                        jnp.float32) * std).astype(dtype),
+                "b": jnp.zeros((spec.n_out,), dtype)}
+    return params
+
+
+def _ln(p, x):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+
+
+def init_stream_state(cfg: TDSConfig) -> dict:
+    """Left-context ring buffers — the scratchpad the paper keeps in the
+    512KB shared memory between decoding steps (~275KB; see DESIGN.md)."""
+    state = {}
+    w = cfg.stages[0].feat
+    for spec in build_kernel_specs(cfg):
+        if spec.kind == "conv":
+            c_in = spec.n_in // spec.kernel
+            state[spec.name] = jnp.zeros((spec.kernel - 1, w, c_in),
+                                         jnp.float32)
+    return state
+
+
+def state_bytes(cfg: TDSConfig, bytes_per_el: int = 1) -> int:
+    st = init_stream_state(cfg)
+    return sum(int(np.prod(a.shape)) * bytes_per_el
+               for a in jax.tree.leaves(st))
+
+
+def _conv_step(p, spec: KernelSpec, state, x):
+    """Causal strided time-conv. x: (m, w, c_in); state: (k-1, w, c_in)."""
+    k, s = spec.kernel, spec.stride
+    m = x.shape[0]
+    assert m % s == 0, (m, s)
+    xp = jnp.concatenate([state, x], axis=0)        # (k-1+m, w, c_in)
+    t_out = m // s
+    # output t consumes xp[s*t : s*t+k] (ends at input index s*t + s - 1)
+    off = (jnp.arange(t_out) * s)[:, None] + jnp.arange(k)[None, :]
+    win = xp[off]                                    # (t_out, k, w, c_in)
+    y = jnp.einsum("tkwc,kcd->twd", win, p["w"]) + p["b"]
+    new_state = xp[-(k - 1):] if k > 1 else state
+    return y, new_state
+
+
+def forward(params, cfg: TDSConfig, feats: jax.Array,
+            state: Optional[dict] = None, use_int8: bool = False):
+    """feats: (T, n_mfcc). Returns (log_probs (T', V), new_state).
+
+    state=None => offline (zero left context).  T must be divisible by the
+    total subsample.  use_int8 routes FC/head matmuls through the int8
+    quantized path (core/quant) — ASRPU's 8-bit MAC.
+    """
+    specs = build_kernel_specs(cfg)
+    st_in = state if state is not None else init_stream_state(cfg)
+    new_state = dict(st_in)
+    w = cfg.stages[0].feat
+    x = feats[:, :, None]                            # (T, w, 1)
+
+    def matmul(xm, pw, pb):
+        if use_int8:
+            from repro.kernels import ops
+            return ops.int8_matmul(xm, pw) + pb
+        return xm @ pw + pb
+
+    for spec in specs:
+        p = params[spec.name]
+        if spec.kind == "conv":
+            res = x
+            y, ns = _conv_step(p, spec, st_in[spec.name], x)
+            new_state[spec.name] = ns
+            if spec.activation == "relu":
+                y = jax.nn.relu(y)
+            x = y + res if (spec.residual and res.shape == y.shape) else y
+        elif spec.kind == "layernorm":
+            t = x.shape[0]
+            x = _ln(p, x.reshape(t, -1)).reshape(x.shape)
+        else:  # fc / head
+            t = x.shape[0]
+            xm = x.reshape(t, -1)
+            if spec.activation == "relu":      # fc1: start of the FC block
+                fc_res = xm
+            y = matmul(xm, p["w"], p["b"])
+            if spec.activation == "relu":
+                y = jax.nn.relu(y)
+            if spec.residual and y.shape == fc_res.shape:
+                y = y + fc_res                 # TDS residual: whole FC block
+            if spec.name == "head":
+                return jax.nn.log_softmax(y, axis=-1), new_state
+            c = spec.n_out // w
+            x = y.reshape(t, w, c)
+    raise AssertionError("head kernel missing")

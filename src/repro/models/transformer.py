@@ -1,0 +1,410 @@
+"""Generic LM-family model: dense / GQA / MoE / SSM / hybrid, one code path.
+
+Layers are lax.scan'ned over weights stacked along a leading "repeat" axis,
+with an *effective period* P = lcm(len(layer_pattern), moe_every): layer
+i = r*P + p, and the sub-layer kind (attn/mamba, dense-MLP/MoE) is static
+per period position p.  This keeps the HLO O(1) in depth (80-layer models
+compile as fast as 2-layer ones) and makes the per-layer KV/SSM caches
+natural scan xs/ys.
+
+Three entry points (all pure functions of (params, ...)):
+  loss_fn(params, batch)              — training loss (remat'd scan body)
+  prefill(params, batch)              — full-sequence forward, returns
+                                        (last-token logits, decode cache)
+  decode_step(params, cache, batch)   — one-token step against the cache
+                                        (ring-buffer for SWA archs)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, mamba, moe
+
+MOE_AUX_COEF = 0.01
+Z_LOSS_COEF = 1e-4
+
+
+def pad_vocab(v: int, multiple: int = 512) -> int:
+    """Megatron-style vocab padding so embed/head shard evenly."""
+    return -(-v // multiple) * multiple
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, sharder=None):
+        self.cfg = cfg
+        me = cfg.moe.moe_every if cfg.moe else 1
+        self.P = _lcm(cfg.period, me)
+        assert cfg.n_layers % self.P == 0, (cfg.name, cfg.n_layers, self.P)
+        self.R = cfg.n_layers // self.P
+        self.Vp = pad_vocab(cfg.vocab_size)
+        self.dtype = jnp.dtype(cfg.dtype)
+        if sharder is None:
+            from repro.parallel.sharding import Sharder
+            sharder = Sharder(None)
+        self.sh = sharder
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+    def _kind(self, p: int) -> str:
+        return self.cfg.layer_kind(p % self.cfg.period)
+
+    def _is_moe(self, p: int) -> bool:
+        return self.cfg.is_moe_layer(p)
+
+    def _has_mlp(self, p: int) -> bool:
+        return self._is_moe(p) or self.cfg.d_ff > 0
+
+    def _init_sublayer(self, key, p: int) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        ks = jax.random.split(key, 4)
+        out = {"norm1": layers.init_norm(d, cfg.norm)}
+        if self._kind(p) == "attn":
+            qkv_out = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim
+            out["mixer"] = {
+                "wqkv": layers.init_linear(ks[0], d, qkv_out, cfg.qkv_bias,
+                                           self.dtype),
+                "wo": layers.init_linear(ks[1], cfg.n_heads * cfg.head_dim, d,
+                                         dtype=self.dtype),
+            }
+        else:
+            out["mixer"] = mamba.init_mamba(ks[0], d, cfg.ssm, self.dtype)
+        if self._has_mlp(p):
+            out["norm2"] = layers.init_norm(d, cfg.norm)
+            if self._is_moe(p):
+                out["mlp"] = moe.init_moe(ks[2], d, cfg.moe, self.dtype)
+            else:
+                out["mlp"] = layers.init_mlp(ks[2], d, cfg.d_ff, self.dtype)
+        return out
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, self.P + 2)
+        params = {"final_norm": layers.init_norm(cfg.d_model, cfg.norm)}
+        if cfg.embed_inputs or cfg.tie_embeddings:
+            std = 1.0 / math.sqrt(cfg.d_model)
+            params["embed"] = {"w": (jax.random.normal(
+                keys[-1], (self.Vp, cfg.d_model), jnp.float32) * std
+            ).astype(self.dtype)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.init_linear(
+                keys[-2], cfg.d_model, self.Vp, dtype=self.dtype)
+
+        def stack_init(p):
+            def one(key):
+                return self._init_sublayer(key, p)
+            return jax.vmap(one)(jax.random.split(keys[p], self.R))
+
+        params["layers"] = {f"p{p}": stack_init(p) for p in range(self.P)}
+        return params
+
+    def param_shapes(self, key=None) -> dict:
+        key = jax.random.PRNGKey(0) if key is None else key
+        return jax.eval_shape(self.init, key)
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def cache_len(self, seq_len: int) -> int:
+        if self.cfg.attn_window is not None:
+            return min(seq_len, self.cfg.attn_window)
+        return seq_len
+
+    def init_cache(self, batch: int, seq_len: int) -> dict:
+        cfg = self.cfg
+        Sc = self.cache_len(seq_len)
+        lay = {}
+        for p in range(self.P):
+            if self._kind(p) == "attn":
+                shp = (self.R, batch, Sc, cfg.n_kv_heads, cfg.head_dim)
+                lay[f"p{p}"] = {"k": jnp.zeros(shp, self.dtype),
+                                "v": jnp.zeros(shp, self.dtype)}
+            else:
+                one = mamba.init_cache(batch, cfg.d_model, cfg.ssm, self.dtype)
+                lay[f"p{p}"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (self.R,) + a.shape), one)
+        return {"layers": lay,
+                "kpos": jnp.full((Sc,), -1, jnp.int32),
+                "offset": jnp.zeros((), jnp.int32)}
+
+    # ------------------------------------------------------------------
+    # forward pieces
+    # ------------------------------------------------------------------
+    def _positions(self, batch: dict, B: int, S: int, offset=0):
+        if "positions" in batch:
+            return batch["positions"]
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset   # (1,S)
+        pos = jnp.broadcast_to(pos, (B, S))
+        if self.cfg.rope == "mrope":
+            pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+        return pos
+
+    def _embed(self, params, batch) -> jax.Array:
+        if self.cfg.embed_inputs:
+            x = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+        else:
+            x = batch["embeds"].astype(self.dtype)
+        return self.sh.act(x)
+
+    def _logits(self, params, x) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            y = jnp.einsum("...d,vd->...v", x, params["embed"]["w"])
+        else:
+            y = layers.linear(params["lm_head"], x)
+        return self.sh.logits(y)
+
+    def _attn_full(self, p_mix, x, positions):
+        """Training/prefill attention. Returns (out, (k, v))."""
+        cfg = self.cfg
+        B, S, _ = x.shape
+        qkv = layers.linear(p_mix["wqkv"], x)
+        Hq = cfg.n_heads * cfg.head_dim
+        Hk = cfg.n_kv_heads * cfg.head_dim
+        q = qkv[..., :Hq].reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k = qkv[..., Hq:Hq + Hk].reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = qkv[..., Hq + Hk:].reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        q = layers.apply_rope(q, positions, cfg.rope, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope, cfg.rope_theta)
+        ipos = positions[..., 0] if cfg.rope == "mrope" else positions
+        out = layers.attention_chunked(
+            q, k, v, ipos, ipos, causal=True, window=cfg.attn_window,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+            sharder=self.sh)
+        out = layers.linear(p_mix["wo"], out.reshape(B, S, Hq))
+        # cache entries leave in sequence-parallel layout (S over 'model')
+        return out, (self.sh.seq(k), self.sh.seq(v))
+
+    def _attn_decode(self, p_mix, x, positions, kv_cache, kpos, slot):
+        """Decode attention: the cache is READ-ONLY here; the new (k, v)
+        is attended as a separate softmax column and returned, so the
+        layer scan emits only (B, 1, K, Dh) slices — the caller writes
+        them all into the donated cache with one batched in-place DUS
+        (scanning full caches as carry made XLA copy them every layer)."""
+        cfg = self.cfg
+        B = x.shape[0]
+        qkv = layers.linear(p_mix["wqkv"], x)                   # (B,1,·)
+        Hq = cfg.n_heads * cfg.head_dim
+        Hk = cfg.n_kv_heads * cfg.head_dim
+        q = qkv[..., :Hq].reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        k = qkv[..., Hq:Hq + Hk].reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = qkv[..., Hq + Hk:].reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = layers.apply_rope(q, positions, cfg.rope, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope, cfg.rope_theta)
+        ipos = positions[..., 0] if cfg.rope == "mrope" else positions
+        # the slot being (re)written holds the evicted entry: mask it
+        kpos_m = kpos.at[slot].set(-1)
+        sh = self.sh
+        Sc = kv_cache["k"].shape[1]
+        if (sh.mesh is not None and not sh.baseline
+                and Sc % sh.mesh.shape["model"] == 0):
+            # flash-decoding: partial softmax per model-shard of the
+            # sequence-sharded cache; O(B*H*D) combine, no cache gather
+            out = layers.attention_decode_sharded(
+                q, kv_cache["k"], kv_cache["v"], ipos[:, 0], kpos_m,
+                window=cfg.attn_window, k_new=k, v_new=v, sharder=sh)
+        else:
+            out = layers.attention_decode(q, kv_cache["k"], kv_cache["v"],
+                                          ipos[:, 0], kpos_m,
+                                          window=cfg.attn_window,
+                                          k_new=k, v_new=v)
+        out = layers.linear(p_mix["wo"], out.reshape(B, 1, Hq))
+        return out, {"k": k, "v": v}
+
+    def _sublayer(self, p, lp, x, positions, cache_p, kpos, slot, decode):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = layers.apply_norm(lp["norm1"], x, cfg.norm)
+        if self._kind(p) == "attn":
+            if decode:
+                out, new_cache = self._attn_decode(lp["mixer"], h, positions,
+                                                   cache_p, kpos, slot)
+            else:
+                out, kv = self._attn_full(lp["mixer"], h, positions)
+                new_cache = {"k": kv[0], "v": kv[1]}
+        else:
+            out, new_cache = mamba.apply_mamba(lp["mixer"], h, cfg.ssm,
+                                               cache_p, sharder=self.sh)
+        x = x + out
+        if self._has_mlp(p):
+            h = layers.apply_norm(lp["norm2"], x, cfg.norm)
+            if self._is_moe(p):
+                y, aux = moe.apply_moe(lp["mlp"], h, cfg.moe, cfg.act,
+                                       sharder=self.sh)
+            else:
+                y = layers.apply_mlp(lp["mlp"], h, cfg.act)
+            x = x + y
+        return self.sh.act(x), new_cache, aux
+
+    def _scan_layers(self, params, x, positions, cache=None, *, decode=False,
+                     remat=False, collect_cache=False):
+        kpos = cache["kpos"] if cache is not None else None
+        slot = (cache["offset"] % jnp.int32(max(1, kpos.shape[0]))
+                if decode else None)
+        if decode:
+            kpos = kpos.at[slot].set(cache["offset"])
+
+        if decode:
+            # The cache is read via per-layer dynamic-index from a
+            # loop-INVARIANT operand (not scan xs: xs + post-scan DUS into
+            # the same donated buffer is a WAR hazard that makes XLA copy
+            # the whole cache).  Each layer emits only the new-token KV
+            # (and the small SSM/conv states) as ys; the KV slices are
+            # written with ONE batched dynamic-update-slice after the scan.
+            cache_layers = cache["layers"]
+
+            def body(h, xs):
+                lp, r = xs
+                ys = {}
+                for p in range(self.P):
+                    cp = jax.tree.map(
+                        lambda a: lax.dynamic_index_in_dim(
+                            a, r, 0, keepdims=False), cache_layers[f"p{p}"])
+                    h, nc, _ = self._sublayer(p, lp[f"p{p}"], h, positions,
+                                              cp, kpos, slot, decode)
+                    ys[f"p{p}"] = nc
+                return h, ys
+
+            x, new_slices = lax.scan(
+                body, x, (params["layers"], jnp.arange(self.R)))
+            new_layers = {}
+            for p in range(self.P):
+                if self._kind(p) == "attn":
+                    old = cache["layers"][f"p{p}"]
+                    upd = new_slices[f"p{p}"]       # k/v: (R, B, 1, K, Dh)
+                    new_layers[f"p{p}"] = {
+                        name: lax.dynamic_update_slice_in_dim(
+                            old[name], upd[name].astype(old[name].dtype),
+                            slot, axis=2)
+                        for name in ("k", "v")}
+                else:
+                    new_layers[f"p{p}"] = new_slices[f"p{p}"]
+            return x, jnp.zeros((), jnp.float32), {
+                "layers": new_layers, "kpos": kpos,
+                "offset": cache["offset"] + 1}
+
+        def body(carry, xs):
+            h, aux_sum = carry
+            lp = xs[0]
+            cr = xs[1] if cache is not None else {f"p{p}": None
+                                                  for p in range(self.P)}
+            new_c = {}
+            for p in range(self.P):
+                h, nc, aux = self._sublayer(p, lp[f"p{p}"], h, positions,
+                                            cr[f"p{p}"], kpos, slot, decode)
+                new_c[f"p{p}"] = nc
+            ys = new_c if collect_cache else None
+            return (h, aux_sum + aux), ys
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (params["layers"], cache["layers"]) if cache is not None \
+            else (params["layers"],)
+        (x, aux), new_layers = lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+        new_cache = None
+        if collect_cache:
+            new_cache = {"layers": new_layers, "kpos": kpos,
+                         "offset": (cache["offset"] if cache is not None
+                                    else jnp.zeros((), jnp.int32)) + 1}
+        return x, aux, new_cache
+
+    # ------------------------------------------------------------------
+    # public entry points
+    # ------------------------------------------------------------------
+    def loss_fn(self, params, batch, *, remat=True, loss_chunks=0):
+        """batch: tokens/embeds (B,S[,D]), labels (B,S) int32 (-1 = pad).
+
+        Cross-entropy is computed in sequence chunks (lax.scan over S with a
+        checkpointed body): the fp32 (B, S, V) logits tensor — the largest
+        single training buffer for big-vocab archs — never materializes;
+        each chunk's logits are recomputed in the backward pass.
+        """
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S = x.shape[:2]
+        positions = self._positions(batch, B, S)
+        x, aux, _ = self._scan_layers(params, x, positions, remat=remat)
+        x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+        labels = batch["labels"]
+        if loss_chunks == 0:
+            loss_chunks = 16 if S % 16 == 0 and S >= 2048 else 1
+        nc = loss_chunks
+        xc = x.reshape(B, nc, S // nc, -1).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, nc, S // nc).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def chunk(carry, xs):
+            nll_s, z_s, n_s = carry
+            xi, li = xs
+            logits = self._logits(params, xi).astype(jnp.float32)
+            valid = li >= 0
+            lbl = jnp.where(valid, li, 0)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+            nll_s = nll_s + jnp.where(valid, lse - gold, 0.0).sum()
+            z_s = z_s + jnp.where(valid, jnp.square(lse), 0.0).sum()
+            n_s = n_s + valid.sum()
+            return (nll_s, z_s, n_s), None
+
+        (nll, zsum, ntok), _ = lax.scan(
+            chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+                    jnp.zeros((), jnp.int32)), (xc, lc))
+        ntok = jnp.maximum(ntok, 1)
+        loss = nll / ntok
+        zloss = Z_LOSS_COEF * zsum / ntok
+        return loss + zloss + MOE_AUX_COEF * aux, {
+            "loss": loss, "aux": aux, "ntok": ntok}
+
+    def prefill(self, params, batch):
+        """Full-seq forward. Returns (last-token logits (B,Vp), cache)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S = x.shape[:2]
+        positions = self._positions(batch, B, S)
+        x, _, cache = self._scan_layers(params, x, positions,
+                                        collect_cache=True)
+        x = layers.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+        logits = self._logits(params, x)[:, 0]
+        # assemble decode cache (kpos/offset); SWA ring handled by decode path
+        Sc = self.cache_len(S)
+        if cache is not None and Sc != S:
+            def trim(a):
+                return a[:, :, -Sc:] if a.ndim >= 3 and a.shape[2] == S else a
+            cache["layers"] = jax.tree.map(trim, cache["layers"])
+            cache["kpos"] = jnp.arange(S - Sc, S, dtype=jnp.int32) % jnp.int32(Sc)
+            cache["kpos"] = jnp.arange(S - Sc, S, dtype=jnp.int32)
+        else:
+            cache["kpos"] = jnp.arange(S, dtype=jnp.int32)
+        cache["offset"] = jnp.full((), S, jnp.int32)
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        """One-token step. batch: tokens (B,1) or embeds (B,1,D).
+
+        Returns (logits (B,Vp), next_token (B,), new_cache).
+        """
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B = x.shape[0]
+        pos = cache["offset"]
+        positions = self._positions(batch, B, 1, offset=pos)
+        x, _, new_cache = self._scan_layers(params, x, positions, cache,
+                                            decode=True)
+        x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = self._logits(params, x)[:, 0].astype(jnp.float32)
+        # mask vocab padding before sampling
+        vmask = jnp.arange(self.Vp) < cfg.vocab_size
+        logits = jnp.where(vmask[None, :], logits, -jnp.inf)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, next_tok, new_cache

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, init, update
+from repro.optim.schedules import cosine_with_warmup

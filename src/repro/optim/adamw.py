@@ -1,0 +1,84 @@
+"""AdamW with optional int8-quantized moments (blockwise, error-free decode).
+
+8-bit moments are the distributed-optimization trick that lets
+llama4-maverick-400b fit the 2-pod HBM budget (see DESIGN.md §5): moment
+trees are stored as {'q': int8, 'scale': f32 blocks} with the same sharding
+rules as their parameters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"     # float32 | bfloat16 | int8
+
+
+def _encode(x, cfg: AdamWConfig):
+    if cfg.moment_dtype == "int8":
+        return quant.quantize(x)
+    return x.astype(jnp.dtype(cfg.moment_dtype))
+
+
+def _decode(x, cfg: AdamWConfig):
+    if cfg.moment_dtype == "int8":
+        return quant.dequantize(x)
+    return x.astype(jnp.float32)
+
+
+def init(params, cfg: AdamWConfig) -> dict:
+    def zeros():
+        # fresh buffers each time: _encode is a no-op astype for f32, and
+        # shared m/v buffers would break donation (same buffer donated twice)
+        return jax.tree.map(lambda p: _encode(
+            jnp.zeros(p.shape, jnp.float32), cfg), params)
+    return {"m": zeros(), "v": zeros(), "count": jnp.zeros((), jnp.int32)}
+
+
+def _is_moment_leaf(x):
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def update(grads, opt_state, params, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_opt_state)."""
+    count = opt_state["count"] + 1
+    # global-norm clip (fp32)
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * _decode(m, cfg) + (1 - cfg.b1) * g
+        v = cfg.b2 * _decode(v, cfg) + (1 - cfg.b2) * jnp.square(g)
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, _encode(m, cfg), _encode(v, cfg)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,13 @@
+"""LR schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, base_lr=1.0, warmup=200, total=10000,
+                       min_frac=0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * warm * cos

@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (
+    Sharder,
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+)

@@ -1,0 +1,9 @@
+"""Test fixtures. NOTE: no XLA_FLAGS here — tests see 1 CPU device; only
+launch/dryrun.py forces the 512-device host platform."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

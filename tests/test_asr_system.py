@@ -1,0 +1,188 @@
+"""Paper-system tests: features, TDS, scheduler, streaming (paper §2-§4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.tds_asr import (ASRPU_HW, FEATURE_CONFIG, TDS_CONFIG,
+                                   DecoderConfig, FeatureConfig, TDSConfig,
+                                   TDSStage)
+from repro.core import features, lexicon as lx
+from repro.core.scheduler import ASRPU, make_step_plan
+from repro.models import tds
+
+TINY_TDS = TDSConfig(
+    stages=(TDSStage(1, 3, 16, 5, 2), TDSStage(1, 4, 16, 5, 2),
+            TDSStage(1, 4, 16, 5, 2)),
+    sub_kernel=6, vocab_size=20)
+
+
+# ---------------------------------------------------------------------------
+# features
+# ---------------------------------------------------------------------------
+def test_mfcc_shapes_and_finite():
+    sig = jnp.asarray(np.random.RandomState(0).randn(16000).astype(np.float32))
+    out = features.mfcc(sig)
+    assert out.shape == (features.frames_producible(16000, FEATURE_CONFIG),
+                         FEATURE_CONFIG.n_mfcc)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 20000))
+def test_frames_producible_setup_arithmetic(n):
+    """The setup-thread property: frames fit exactly in the signal."""
+    cfg = FEATURE_CONFIG
+    f = features.frames_producible(n, cfg)
+    if f > 0:
+        assert (f - 1) * cfg.frame_shift + cfg.frame_len <= n
+        assert f * cfg.frame_shift + cfg.frame_len > n
+    else:
+        assert n < cfg.frame_len
+
+
+def test_mel_filterbank_covers_band():
+    fb = features.mel_filterbank(FEATURE_CONFIG)
+    assert fb.shape == (257, 80)
+    assert (fb.sum(axis=1) >= 0).all()
+    assert fb.max() <= 1.0 + 1e-6
+
+
+def test_mfcc_pallas_path_matches():
+    sig = jnp.asarray(np.random.RandomState(1).randn(4000).astype(np.float32))
+    a = features.mfcc(sig, use_pallas=False)
+    b = features.mfcc(sig, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# TDS
+# ---------------------------------------------------------------------------
+def test_kernel_census_matches_paper():
+    """Paper §4.2: 79 kernels = 18 CONV + 29 FC + 32 LayerNorm."""
+    c = tds.kernel_census(TDS_CONFIG)
+    assert c == {"conv": 18, "fc": 29, "layernorm": 32}
+    assert sum(c.values()) == 79
+
+
+def test_interstep_state_near_paper_claim():
+    """Paper §5.2: ~275KB of intermediate data between decoding steps."""
+    b = tds.state_bytes(TDS_CONFIG, bytes_per_el=1)
+    assert 150_000 < b < 400_000, b
+
+
+def test_fc_partitioning_under_model_memory():
+    """Paper §5.2: FC layers partition into <=1MB model-memory kernels."""
+    for spec in tds.build_kernel_specs(TDS_CONFIG):
+        if spec.kind in ("fc", "head"):
+            per = spec.weight_bytes / spec.n_subkernels
+            assert per <= ASRPU_HW.model_mem_bytes
+    head = [s for s in tds.build_kernel_specs(TDS_CONFIG)
+            if s.name == "head"][0]
+    assert head.n_subkernels > 1          # 1840x9000 must be partitioned
+
+
+def test_tds_streaming_equals_offline():
+    params = tds.init_tds(jax.random.PRNGKey(0), TINY_TDS)
+    T = 32
+    feats = jax.random.normal(jax.random.PRNGKey(1), (T, 16))
+    full, _ = tds.forward(params, TINY_TDS, feats)
+    state = tds.init_stream_state(TINY_TDS)
+    outs = []
+    for i in range(0, T, 8):
+        o, state = tds.forward(params, TINY_TDS, feats[i:i + 8], state)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.concatenate(outs)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tds_int8_path_close_to_fp32():
+    params = tds.init_tds(jax.random.PRNGKey(0), TINY_TDS)
+    feats = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+    a, _ = tds.forward(params, TINY_TDS, feats, use_int8=False)
+    b, _ = tds.forward(params, TINY_TDS, feats, use_int8=True)
+    # log-softmax outputs; int8 quantization noise stays bounded
+    assert np.abs(np.asarray(a) - np.asarray(b)).max() < 0.5
+
+
+# ---------------------------------------------------------------------------
+# scheduler / plan
+# ---------------------------------------------------------------------------
+def test_step_plan_fig6_structure():
+    plan = make_step_plan(TDS_CONFIG, FEATURE_CONFIG, step_ms=80.0)
+    assert plan.samples_per_step == 1280
+    assert plan.feat_frames_per_step == 8
+    assert plan.acoustic_frames_per_step == 1     # 8x subsample
+    # kernel sequence = mfcc + 79 TDS kernels
+    assert len(plan.kernels) == 80
+    # head kernel: one thread per neuron (paper: "9000 threads")
+    head = plan.kernels[-1]
+    assert head.n_threads == 9000
+
+
+def test_asrpu_end_to_end_streaming():
+    """Full command flow: configure -> DecodingStep* -> CleanDecoding."""
+    words = {"ab": [1, 2], "cd": [3, 4], "e": [5]}
+    lex = lx.build_lexicon(words, max_children=8)
+    lm = lx.uniform_bigram(len(words))
+    params = tds.init_tds(jax.random.PRNGKey(0), TINY_TDS)
+
+    asrpu = ASRPU()
+    feat_cfg = FeatureConfig(n_mels=16, n_mfcc=16)
+    asrpu.configure_acoustic_scoring(TINY_TDS, params, feat_cfg)
+    asrpu.configure_hyp_expansion(lex, lm, DecoderConfig(
+        beam_size=16, beam_threshold=30.0))
+    asrpu.configure_beam_width(20.0)
+
+    rng = np.random.RandomState(0)
+    audio = rng.randn(16000).astype(np.float32)   # 1s
+    # stream in 40ms chunks: decoding steps trigger once 80ms accumulate
+    for off in range(0, 16000, 640):
+        best = asrpu.decoding_step(audio[off:off + 640])
+    assert asrpu._n_steps >= 11                   # ~12 steps of 80ms
+    assert np.isfinite(best["score"])
+    n1 = asrpu._n_steps
+    # CleanDecoding resets
+    asrpu.clean_decoding()
+    assert asrpu._n_steps == 0
+    assert asrpu.best()["score"] == -np.inf
+    # second utterance decodes from scratch
+    asrpu.decoding_step(audio[:3200])
+    assert asrpu._n_steps == 2
+
+
+def test_setup_thread_zero_returns_stops_step():
+    """Insufficient samples => no decoding step runs (setup returns 0)."""
+    words = {"ab": [1, 2]}
+    lex = lx.build_lexicon(words, max_children=4)
+    lm = lx.uniform_bigram(1)
+    params = tds.init_tds(jax.random.PRNGKey(0), TINY_TDS)
+    asrpu = ASRPU()
+    asrpu.configure_acoustic_scoring(TINY_TDS, params,
+                                     FeatureConfig(n_mels=16, n_mfcc=16))
+    asrpu.configure_hyp_expansion(lex, lm, DecoderConfig(beam_size=8))
+    asrpu.decoding_step(np.zeros(100, np.float32))
+    assert asrpu._n_steps == 0
+
+
+def test_delta_features():
+    """Paper §2.1: delta / delta-delta dynamic features."""
+    r = np.random.RandomState(0)
+    f = jnp.asarray(r.randn(20, 5).astype(np.float32))
+    d = features.deltas(f)
+    assert d.shape == f.shape
+    # delta of a constant signal is zero
+    c = jnp.ones((10, 4))
+    assert np.allclose(np.asarray(features.deltas(c)), 0.0)
+    # delta of a linear ramp is the slope
+    ramp = jnp.arange(12.0)[:, None] * jnp.ones((1, 3))
+    dr = np.asarray(features.deltas(ramp))
+    assert np.allclose(dr[3:-3], 1.0, atol=1e-5)
+    # stacked features triple the dim
+    sig = jnp.asarray(r.randn(4000).astype(np.float32))
+    out = features.mfcc_with_deltas(sig)
+    assert out.shape[1] == 3 * features.FeatureConfig().n_mfcc
+    assert np.isfinite(np.asarray(out)).all()

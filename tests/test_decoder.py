@@ -1,0 +1,151 @@
+"""CTC beam decoder + hypothesis unit: exact-reference and property tests."""
+import collections
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.tds_asr import DecoderConfig
+from repro.core import decoder, hypothesis as hyp
+from repro.core import lexicon as lx
+
+WORDS = {"ab": [1, 2], "a": [1], "cd": [3, 4], "ac": [1, 3], "b": [2]}
+
+
+def _exact_reference(logp, lex, lm, cfg):
+    """Unbounded-beam exact prefix search mirroring the decoder semantics."""
+    def lae(a, b):
+        if a == -math.inf:
+            return b
+        if b == -math.inf:
+            return a
+        m = max(a, b)
+        return m + math.log(math.exp(a - m) + math.exp(b - m))
+
+    lp = np.asarray(logp)
+    ch = np.asarray(lex.children)
+    ct = np.asarray(lex.child_token)
+    wid = np.asarray(lex.word_id)
+    init = ((), 0, lm.start_state, -1, ())
+    beams = {init: [0.0, -math.inf]}
+    for t in range(lp.shape[0]):
+        new = collections.defaultdict(lambda: [-math.inf, -math.inf])
+        for (toks, node, lms, last, ws), (pb, pnb) in beams.items():
+            tot = lae(pb, pnb)
+            e = new[(toks, node, lms, last, ws)]
+            e[0] = lae(e[0], tot + lp[t, cfg.blank_id])
+            if last >= 0:
+                e[1] = lae(e[1], pnb + lp[t, last])
+            for c, tok in zip(ch[node], ct[node]):
+                if c < 0:
+                    continue
+                c, tok = int(c), int(tok)
+                base = pb if tok == last else tot
+                sc = base + lp[t, tok]
+                e2 = new[(toks + (tok,), c, lms, tok, ws)]
+                e2[1] = lae(e2[1], sc)
+                w = int(wid[c])
+                if w >= 0:
+                    sc2 = sc + cfg.lm_weight * float(lm.table[lms, w]) \
+                        + cfg.word_score
+                    e3 = new[(toks + (tok,), 0, w, tok, ws + (w,))]
+                    e3[1] = lae(e3[1], sc2)
+        beams = dict(new)
+    key, (pb, pnb) = max(beams.items(), key=lambda kv: lae(*kv[1]))
+    return lae(pb, pnb), key
+
+
+@pytest.mark.parametrize("seed,T", [(0, 4), (1, 6), (2, 8), (3, 5)])
+def test_beam_decode_matches_exact_reference(seed, T):
+    r = np.random.RandomState(seed)
+    lex = lx.build_lexicon(WORDS, max_children=4)
+    lm = lx.uniform_bigram(len(WORDS))
+    cfg = DecoderConfig(beam_size=128, beam_threshold=1e9,
+                        lm_weight=1.0, word_score=0.5)
+    logp = jax.nn.log_softmax(jnp.asarray(r.randn(T, 5).astype(np.float32)))
+    ref_score, ref_key = _exact_reference(logp, lex, lm, cfg)
+    st_final = decoder.decode(logp, lex, lm, cfg)
+    b = decoder.best(st_final)
+    assert abs(float(b["score"]) - ref_score) < 1e-3
+    assert tuple(np.asarray(b["words"])[:int(b["n_words"])]) == ref_key[4]
+    assert tuple(np.asarray(b["tokens"])[:int(b["n_tokens"])]) == ref_key[0]
+
+
+def test_lm_and_word_score_affect_ranking():
+    r = np.random.RandomState(0)
+    lex = lx.build_lexicon(WORDS, max_children=4)
+    counts = np.zeros((len(WORDS) + 1, len(WORDS)))
+    counts[-1, 0] = 100.0    # <s> strongly prefers word 0 ("ab")
+    lm = lx.bigram_from_counts(counts, alpha=0.01)
+    logp = jax.nn.log_softmax(jnp.asarray(r.randn(6, 5).astype(np.float32)))
+    cfg_no = DecoderConfig(beam_size=64, beam_threshold=1e9, lm_weight=0.0)
+    cfg_lm = DecoderConfig(beam_size=64, beam_threshold=1e9, lm_weight=8.0)
+    b_no = decoder.best(decoder.decode(logp, lex, lm, cfg_no))
+    b_lm = decoder.best(decoder.decode(logp, lex, lm, cfg_lm))
+    # with a hard LM prior, committed words must be word 0 if any
+    w = np.asarray(b_lm["words"])[:int(b_lm["n_words"])]
+    assert all(x == 0 for x in w)
+    assert float(b_no["score"]) != float(b_lm["score"])
+
+
+def test_greedy_decode_collapses():
+    lp = jnp.log(jnp.asarray([
+        [.9, .1, 0], [.1, .9, 0], [.05, .9, .05], [.9, .05, .05],
+        [.1, .8, .1], [0, .1, .9]]) + 1e-9)
+    out = np.asarray(decoder.greedy_decode(lp, blank_id=0))
+    got = [t for t in out if t >= 0]
+    assert got == [1, 1, 2]     # repeat collapsed, blank separates
+
+
+# ---------------------------------------------------------------------------
+# hypothesis unit properties
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 40), st.integers(1, 12),
+       st.floats(0.5, 30.0))
+def test_hypothesis_unit_invariants(seed, n, k, beam):
+    r = np.random.RandomState(seed % (2**31 - 1))
+    hashes = jnp.asarray(r.randint(0, 8, n).astype(np.int32))
+    pb = jnp.asarray(r.randn(n).astype(np.float32))
+    pnb = jnp.asarray(r.randn(n).astype(np.float32))
+    cand = hyp.Candidates(hashes, pb, pnb,
+                          {"node": jnp.arange(n, dtype=jnp.int32)})
+    sel = hyp.hypothesis_unit_step(cand, k, beam)
+    tot = np.asarray(hyp.total_score(sel["pb"], sel["pnb"]))
+    valid = np.asarray(sel["valid"])
+    # 1. scores sorted descending over valid slots
+    tv = tot[valid]
+    assert np.all(np.diff(tv) <= 1e-5)
+    # 2. beam threshold respected
+    if valid.any():
+        assert np.all(tv >= tv.max() - beam - 1e-4)
+    # 3. no duplicate hashes among valid
+    hv = np.asarray(sel["hash"])[valid]
+    assert len(set(hv.tolist())) == len(hv)
+    # 4. merged mass conservation: total prob mass of each hash preserved
+    ref_mass = {}
+    for h, a, b in zip(np.asarray(hashes), np.asarray(pb), np.asarray(pnb)):
+        ref_mass[int(h)] = np.logaddexp(ref_mass.get(int(h), -np.inf),
+                                        np.logaddexp(a, b))
+    for h, t in zip(hv, tv):
+        assert abs(ref_mass[int(h)] - t) < 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6))
+def test_merge_is_score_preserving(seed):
+    r = np.random.RandomState(seed)
+    n = 16
+    c = hyp.Candidates(
+        jnp.asarray(r.randint(0, 4, n).astype(np.int32)),
+        jnp.asarray(r.randn(n).astype(np.float32)),
+        jnp.asarray(r.randn(n).astype(np.float32)), {})
+    m = hyp.merge_duplicates(c)
+    tot_before = np.logaddexp.reduce(
+        np.logaddexp(np.asarray(c.pb), np.asarray(c.pnb)))
+    after = np.asarray(hyp.total_score(m.pb, m.pnb))
+    tot_after = np.logaddexp.reduce(after[after > hyp.NEG_INF / 2])
+    assert abs(tot_before - tot_after) < 1e-4

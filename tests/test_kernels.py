@@ -1,0 +1,138 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+R = np.random.RandomState(7)
+
+
+def _arr(*shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((R.randn(*shape) * scale).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(8, 128, 128), (32, 256, 64),
+                                   (100, 200, 96), (1, 1200, 600),
+                                   (128, 128, 128)])
+def test_int8_matmul_matches_ref(m, k, n):
+    x, w = _arr(m, k), _arr(k, n)
+    out = ops.int8_matmul(x, w)
+    xq, xs = ops.quantize_rows(x)
+    wqt, ws = ops.quantize_rows(w.T)
+    expected = ref.int8_matmul(xq, wqt.T, xs, ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 512, 256)])
+def test_int8_matmul_quant_error_small(m, k, n):
+    x, w = _arr(m, k), _arr(k, n)
+    out = np.asarray(ops.int8_matmul(x, w))
+    exact = np.asarray(x @ w)
+    rel = np.abs(out - exact).max() / np.abs(exact).max()
+    assert rel < 0.05, rel
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,skv,causal,window", [
+    (64, 64, True, None), (64, 128, True, None), (32, 128, False, None),
+    (128, 128, True, 48), (64, 256, True, 17),
+])
+def test_flash_attention(sq, skv, causal, window, dtype):
+    q = _arr(2, 3, sq, 32).astype(dtype)
+    k = _arr(2, 3, skv, 32).astype(dtype)
+    v = _arr(2, 3, skv, 32).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=32, block_kv=32)
+    expected = ref.flash_attention(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_attention():
+    """Pallas kernel vs the pure-JAX chunked attention used by the models."""
+    from repro.models import layers
+    B, S, H, K, D = 2, 64, 8, 4, 16
+    q = _arr(B, S, H, D)
+    k = _arr(B, S, K, D)
+    v = _arr(B, S, K, D)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out_jax = layers.attention_chunked(q, k, v, pos, pos, causal=True,
+                                       chunk_q=16, chunk_kv=16)
+    # expand GQA for the kernel
+    kk = jnp.repeat(k, H // K, axis=2)
+    vv = jnp.repeat(v, H // K, axis=2)
+    out_pl = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                                 kk.transpose(0, 2, 1, 3),
+                                 vv.transpose(0, 2, 1, 3),
+                                 causal=True, block_q=16, block_kv=16)
+    np.testing.assert_allclose(np.asarray(out_jax, np.float32),
+                               np.asarray(out_pl.transpose(0, 2, 1, 3),
+                                          np.float32), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("t,d", [(32, 64), (256, 80), (100, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_layernorm(t, d, dtype):
+    if t % 256 and t % 100:  # norm_pallas requires T % bt == 0
+        t = 256
+    x = _arr(t, d).astype(dtype)
+    s, b = _arr(d), _arr(d)
+    np.testing.assert_allclose(
+        np.asarray(ops.layernorm(x, s, b), np.float32),
+        np.asarray(ref.layernorm(x, s, b), np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=2e-2)
+
+
+def test_rmsnorm():
+    x, s = _arr(128, 96), _arr(96)
+    np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, s)),
+                               np.asarray(ref.rmsnorm(x, s)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# logmel / beam prune / tds conv
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("t", [8, 50, 128, 300])
+def test_logmel(t):
+    p = jnp.abs(_arr(t, 257)) + 1e-3
+    fb = jnp.abs(_arr(257, 80))
+    dct = _arr(80, 40)
+    np.testing.assert_allclose(np.asarray(ops.logmel(p, fb, dct)),
+                               np.asarray(ref.logmel(p, fb, dct)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,beam", [(100, 1.0), (1000, 5.0), (8448, 25.0)])
+def test_beam_prune(n, beam):
+    s = _arr(n, scale=10.0)
+    np.testing.assert_array_equal(np.asarray(ops.beam_prune(s, beam)),
+                                  np.asarray(ref.beam_prune(s, beam)))
+
+
+@pytest.mark.parametrize("k,stride,t,w,cin,cout", [
+    (9, 1, 32, 16, 5, 7), (9, 2, 32, 16, 5, 7), (10, 2, 64, 80, 15, 19),
+    (21, 1, 64, 8, 3, 3),
+])
+def test_tds_conv(k, stride, t, w, cin, cout):
+    x = _arr(k - 1 + t, w, cin)
+    wgt = _arr(k, cin, cout, scale=0.3)
+    b = _arr(cout)
+    np.testing.assert_allclose(
+        np.asarray(ops.tds_conv(x, wgt, b, stride=stride)),
+        np.asarray(ref.tds_conv(x, wgt, b, stride=stride)),
+        rtol=1e-4, atol=1e-4)
