@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
   rtf_measured        — measured JAX wall-clock RTF of the streaming
                         decoder on this CPU (not the ASRPU estimate)
   beam_throughput     — hypothesis-expansion executions/sec (measured)
+  multistream         — sequential vs batched (slot-pool) ASR serving
+                        throughput over the same utterances
   kernel_<name>       — Pallas kernels, interpret-mode wall time +
                         analytic v5e roofline time (derived column)
   dryrun_summary      — roofline terms per dry-run artifact (if present)
@@ -112,6 +114,49 @@ def rtf_measured():
         f"cpu_rtf={per_step/0.080:.2f}")
 
 
+def multistream_throughput():
+    """Sequential vs batched ASR serving over the same utterance set: one
+    ASRPU decoding utterances back-to-back vs a MultiStreamASRPU slot
+    pool advancing all of them through one vmapped decoding step."""
+    from repro.core.scheduler import MultiStreamASRPU
+    from repro.data.pipeline import SyntheticASR
+    from repro.launch.serve import asr_demo_system, configure_asrpu
+
+    tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
+    data = SyntheticASR(words)
+    utts = [data.utterance(i)["audio"] for i in range(4)]
+    audio_s = sum(len(a) for a in utts) / 16000
+
+    single = ASRPU()
+    configure_asrpu(single, tds_cfg, lex, lm, dec_cfg, params)
+    # warmup must cover the full timed shape (decode + finalize + best +
+    # re-init), not just the fused step, or one-time op tracing lands in
+    # dt_seq and inflates the batched "speedup"
+    single.decoding_step(utts[0])
+    single.best(final=True)
+    single.clean_decoding()
+    t0 = time.perf_counter()
+    for a in utts:
+        single.clean_decoding()
+        single.decoding_step(a)
+        single.best(final=True)
+    dt_seq = time.perf_counter() - t0
+
+    multi = MultiStreamASRPU(len(utts))
+    configure_asrpu(multi, tds_cfg, lex, lm, dec_cfg, params)
+    multi.serve(utts[:1])                         # warmup/compile
+    multi.clean_decoding()
+    t0 = time.perf_counter()
+    multi.serve(utts)
+    dt_bat = time.perf_counter() - t0
+
+    row("serve_asr_sequential", dt_seq * 1e6,
+        f"rtf={dt_seq/audio_s:.3f};{audio_s/dt_seq:.2f}x_realtime")
+    row("serve_asr_batched_b4", dt_bat * 1e6,
+        f"rtf={dt_bat/audio_s:.3f};{audio_s/dt_bat:.2f}x_realtime;"
+        f"speedup={dt_seq/dt_bat:.2f}x")
+
+
 def beam_throughput():
     words = {f"w{i}": [1 + (i * 7 + j) % 30 for j in range(3)]
              for i in range(20)}
@@ -204,6 +249,7 @@ def main() -> None:
     fig11_kernel_times()
     sec54_realtime()
     beam_throughput()
+    multistream_throughput()
     kernel_benches()
     rtf_measured()
     dryrun_summary()

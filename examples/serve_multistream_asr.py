@@ -1,0 +1,29 @@
+"""End-to-end multi-stream ASR serving: a slot pool of concurrent
+utterance streams advanced by ONE vmapped/jitted ASRPU decoding step
+(the ASR twin of examples/serve_batched_lm.py's continuous batching).
+
+Queued utterances are admitted into freed slots; each slot keeps its own
+sample buffer, TDS left-context, and beam; slots without a full 80 ms
+window are masked so their state passes through unchanged — per-slot
+results match the single-stream decoder's (parity-tested in
+tests/test_multistream.py).
+
+  PYTHONPATH=src python examples/serve_multistream_asr.py [--streams 4]
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "src"))
+
+from repro.launch import serve
+
+
+def main():
+    argv = ["--mode", "asr", "--streams", "4", "--utterances", "6"]
+    if len(sys.argv) > 1:
+        argv = sys.argv[1:]
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

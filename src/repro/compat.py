@@ -1,0 +1,49 @@
+"""Version-compatibility shims for the jax APIs this repo uses.
+
+The codebase targets the modern jax API surface; this module maps those
+names onto older runtimes (jax 0.4.x) where they live elsewhere or are
+spelled differently:
+
+  * ``jax.shard_map``             -> ``jax.experimental.shard_map.shard_map``
+    (and its ``check_vma=`` kwarg -> ``check_rep=``)
+  * ``pallas.tpu.CompilerParams`` -> ``pallas.tpu.TPUCompilerParams``
+    (resolved lazily: only the Pallas kernel modules pay the
+    pallas import / name lookup)
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    kw = {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def __getattr__(name):
+    if name == "CompilerParams":
+        from jax.experimental.pallas import tpu as pltpu
+        cp = getattr(pltpu, "CompilerParams", None) \
+            or getattr(pltpu, "TPUCompilerParams")
+        globals()[name] = cp                       # cache for next lookup
+        return cp
+    raise AttributeError(name)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """jax.sharding.AbstractMesh across the 0.4.x -> modern signature
+    change ((name, size) pairs vs separate sizes + names tuples)."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes),
+                                         tuple(axis_names))
+    except TypeError:                              # jax 0.4.x
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_sizes)))

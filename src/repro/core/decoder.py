@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.tds_asr import DecoderConfig
 from repro.core import hypothesis as hyp
+from repro.core import treeutil
 from repro.core.lexicon import BigramLM, Lexicon
 
 NEG_INF = hyp.NEG_INF
@@ -191,6 +192,54 @@ def decode(log_probs: jax.Array, lex: Lexicon, lm: BigramLM,
         return expand_step(s, lp, lex, lm, cfg), None
     st, _ = jax.lax.scan(step, st, log_probs)
     return st
+
+
+# ---------------------------------------------------------------------------
+# batched (multi-stream) decoding: every op above is per-stream pure, so a
+# leading stream axis is one vmap away.  BeamState leaves become (B, K, ...).
+# ---------------------------------------------------------------------------
+def init_batched_state(batch: int, k: int, lm: BigramLM) -> BeamState:
+    """Beam state for `batch` independent streams: leaves are (B, K, ...)."""
+    return treeutil.batch_tree(init_state(k, lm), batch)
+
+
+def expand_step_batched(state: BeamState, log_probs: jax.Array, lex: Lexicon,
+                        lm: BigramLM, cfg: DecoderConfig,
+                        use_pallas_prune: bool = False) -> BeamState:
+    """expand_step over a leading stream axis.
+
+    state: (B, K, ...) BeamState; log_probs: (B, V) — one acoustic frame
+    per stream.  The lexicon/LM are shared (closed over, not batched)."""
+    return jax.vmap(
+        lambda s, lp: expand_step(s, lp, lex, lm, cfg, use_pallas_prune)
+    )(state, log_probs)
+
+
+def decode_batched(log_probs: jax.Array, lex: Lexicon, lm: BigramLM,
+                   cfg: DecoderConfig) -> BeamState:
+    """Offline batched decode: log_probs (B, T, V) -> (B, K, ...) beams."""
+    st = init_batched_state(log_probs.shape[0], cfg.beam_size, lm)
+
+    def step(s, lp):
+        return expand_step_batched(s, lp, lex, lm, cfg), None
+    st, _ = jax.lax.scan(step, st, jnp.swapaxes(log_probs, 0, 1))
+    return st
+
+
+def finalize_batched(state: BeamState, lex: Lexicon, lm: BigramLM,
+                     cfg: DecoderConfig) -> BeamState:
+    """finalize over a leading stream axis: (B, K, ...) -> (B, K, ...)."""
+    return jax.vmap(lambda s: finalize(s, lex, lm, cfg))(state)
+
+
+def slot_state(state: BeamState, slot) -> BeamState:
+    """Slice one stream's (K, ...) beam out of a (B, K, ...) batch."""
+    return jax.tree.map(lambda a: a[slot], state)
+
+
+def reset_slot(state: BeamState, slot, lm: BigramLM) -> BeamState:
+    """Return `state` with stream `slot` reset to a fresh init_state."""
+    return treeutil.set_slot(state, slot, init_state(state.hash.shape[1], lm))
 
 
 def finalize(state: BeamState, lex: Lexicon, lm: BigramLM,

@@ -22,7 +22,8 @@ paper's instruction-count performance model (benchmarks/).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass
 from typing import Callable, List, Optional
 
 import jax
@@ -146,9 +147,11 @@ class ASRPU:
         self._n_steps = 0
 
     # ---- the fused decoding-step program ------------------------------
-    def _build_step(self):
-        if self._lex is None or self._tds_cfg is None:
-            return
+    def _fused_step_fn(self) -> Callable:
+        """The fused single-stream decoding step (acoustic scoring + one
+        hypothesis expansion per emitted acoustic frame).  Pure in all
+        carried state, so the multi-stream scheduler can vmap it over a
+        leading slot axis unchanged."""
         tds_cfg, feat_cfg = self._tds_cfg, self._feat_cfg
         dec_cfg, lex, lm = self._dec_cfg, self._lex, self._lm
         use_int8 = self._use_int8
@@ -164,7 +167,20 @@ class ASRPU:
             beam_state, _ = jax.lax.scan(expand, beam_state, logp)
             return new_state, beam_state
 
-        self._jit_step = jax.jit(step)
+        return step
+
+    def _build_step(self):
+        if self._lex is None or self._tds_cfg is None:
+            return
+        self._jit_step = jax.jit(self._fused_step_fn())
+
+    def _window(self):
+        """(retired, needed) samples per decoding step: a step consumes
+        samples_per_step and the MFCC framing additionally needs
+        frame_len - frame_shift lookahead samples in the buffer."""
+        spp = self.plan.samples_per_step
+        look = self._feat_cfg.frame_len - self._feat_cfg.frame_shift
+        return spp, spp + look
 
     # ---- runtime commands ---------------------------------------------
     def decoding_step(self, signal: np.ndarray):
@@ -176,11 +192,9 @@ class ASRPU:
         if self._stream_state is None:
             self._stream_state = tds.init_stream_state(self._tds_cfg)
             self._beam = dec.init_state(self._dec_cfg.beam_size, self._lm)
-        spp = self.plan.samples_per_step
-        # the MFCC framing needs frame_len-frame_shift lookahead samples
-        look = self._feat_cfg.frame_len - self._feat_cfg.frame_shift
-        while self._sample_buf.shape[0] >= spp + look:
-            chunk = jnp.asarray(self._sample_buf[:spp + look])
+        spp, need = self._window()
+        while self._sample_buf.shape[0] >= need:
+            chunk = jnp.asarray(self._sample_buf[:need])
             self._sample_buf = self._sample_buf[spp:]
             self._stream_state, self._beam = self._jit_step(
                 self._params, self._stream_state, self._beam, chunk)
@@ -192,7 +206,9 @@ class ASRPU:
         utterance-final word (call when the utterance is known to end)."""
         if self._beam is None:
             return {"words": np.zeros((0,), np.int32), "score": -np.inf}
-        beam = self._beam
+        return self._best_of(self._beam, final)
+
+    def _best_of(self, beam, final: bool):
         if final:
             beam = dec.finalize(beam, self._lex, self._lm, self._dec_cfg)
         b = dec.best(beam)
@@ -200,3 +216,143 @@ class ASRPU:
         return {"words": np.asarray(b["words"])[:n],
                 "tokens": np.asarray(b["tokens"])[:int(b["n_tokens"])],
                 "score": float(b["score"])}
+
+
+class MultiStreamASRPU(ASRPU):
+    """B concurrent utterance streams through ONE vmapped decoding step.
+
+    The single-stream ASRPU advances one `_stream_state`/`_beam` per
+    DecodingStep; at server scale the fused step must run at batch size
+    B.  This scheduler owns a slot pool (mirroring `serve_lm`'s
+    continuous batching): every pytree leaf of the TDS stream state and
+    the BeamState carries a leading slot axis, each slot has its own
+    sample buffer, and one jitted `vmap` of the fused step advances all
+    slots that have a full 80 ms window.  Slots without a full window are
+    masked out — their carried state passes through unchanged, so each
+    slot's trajectory is exactly the single-stream one (parity-tested in
+    tests/test_multistream.py).
+
+    Command API extensions over ASRPU:
+      CleanDecoding(slot)   -> clean_decoding(slot=s): reset one stream
+      DecodingStep(slot, x) -> decoding_step(x, slot=s)
+      serve(utterances)     -> continuous batching: admission of queued
+                               utterances into freed slots until drained
+    """
+
+    def __init__(self, n_streams: int, hw=ASRPU_HW):
+        assert n_streams >= 1
+        self.n_streams = n_streams
+        super().__init__(hw)
+
+    # ---- the vmapped fused step --------------------------------------
+    def _build_step(self):
+        if self._lex is None or self._tds_cfg is None:
+            return
+        vstep = jax.vmap(self._fused_step_fn(), in_axes=(None, 0, 0, 0))
+
+        def step(params, stream_state, beam_state, samples, active):
+            new_ss, new_bs = vstep(params, stream_state, beam_state, samples)
+
+            def keep(new, old):
+                m = active.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(m, new, old)
+            return (jax.tree.map(keep, new_ss, stream_state),
+                    jax.tree.map(keep, new_bs, beam_state))
+
+        self._jit_step = jax.jit(step)
+
+    # ---- slot-pool state ---------------------------------------------
+    def clean_decoding(self, slot: Optional[int] = None):
+        """Reset all streams (slot=None) or one stream's buffers, left
+        context, and hypothesis memory (utterance boundary in a slot)."""
+        if slot is None:
+            self._slot_bufs = [np.zeros((0,), np.float32)
+                               for _ in range(self.n_streams)]
+            self._slot_steps = np.zeros((self.n_streams,), np.int64)
+            self._stream_state = None
+            self._beam = None
+            self._n_steps = 0
+            return
+        self._slot_bufs[slot] = np.zeros((0,), np.float32)
+        self._slot_steps[slot] = 0
+        if self._stream_state is not None:
+            self._stream_state = tds.reset_stream_slot(
+                self._stream_state, slot, self._tds_cfg)
+            self._beam = dec.reset_slot(self._beam, slot, self._lm)
+
+    def _ensure_state(self):
+        if self._stream_state is None:
+            self._stream_state = tds.init_batched_stream_state(
+                self._tds_cfg, self.n_streams)
+            self._beam = dec.init_batched_state(
+                self.n_streams, self._dec_cfg.beam_size, self._lm)
+
+    def _pump_once(self) -> bool:
+        """One vmapped decoding step advancing every slot that has a full
+        window buffered; masked slots carry state through unchanged.
+        Returns False (and runs nothing) when no slot can produce output
+        — the setup threads all returned zero."""
+        spp, need = self._window()
+        active = np.array([b.shape[0] >= need for b in self._slot_bufs])
+        if not active.any():
+            return False
+        batch = np.zeros((self.n_streams, need), np.float32)
+        for s in range(self.n_streams):
+            if active[s]:
+                batch[s] = self._slot_bufs[s][:need]
+                self._slot_bufs[s] = self._slot_bufs[s][spp:]
+        self._stream_state, self._beam = self._jit_step(
+            self._params, self._stream_state, self._beam,
+            jnp.asarray(batch), jnp.asarray(active))
+        self._slot_steps += active
+        self._n_steps += 1
+        return True
+
+    # ---- runtime commands --------------------------------------------
+    # slot/final are keyword-only: through the ASRPU-typed interface a
+    # positional best(True) would otherwise bind slot=1 silently.
+    def decoding_step(self, signal: np.ndarray, *, slot: int = 0):
+        """Append `signal` to stream `slot` and advance ALL streams for
+        every full window available. Returns slot's best hypothesis."""
+        assert self._jit_step is not None, "accelerator not configured"
+        self._slot_bufs[slot] = np.concatenate(
+            [self._slot_bufs[slot], np.asarray(signal, np.float32)])
+        self._ensure_state()
+        while self._pump_once():
+            pass
+        return self.best(slot=slot)
+
+    def best(self, *, slot: int = 0, final: bool = False):
+        """Best hypothesis of stream `slot` (see ASRPU.best)."""
+        if self._beam is None:
+            return {"words": np.zeros((0,), np.int32), "score": -np.inf}
+        return self._best_of(dec.slot_state(self._beam, slot), final)
+
+    def serve(self, utterances) -> List[dict]:
+        """Continuous batching over whole utterances (audio arrays).
+
+        Queued utterances are admitted into free slots; one vmapped step
+        advances every active slot; a slot whose buffer can no longer
+        fill a window is finalized (pending word committed) and freed for
+        the next queued utterance.  Results come back in input order."""
+        assert self._jit_step is not None, "accelerator not configured"
+        self._ensure_state()
+        _, need = self._window()
+        queue = deque(enumerate(utterances))
+        owner: List[Optional[int]] = [None] * self.n_streams
+        results = {}
+        while queue or any(o is not None for o in owner):
+            for s in range(self.n_streams):
+                if owner[s] is None and queue:
+                    rid, audio = queue.popleft()
+                    self.clean_decoding(slot=s)
+                    self._slot_bufs[s] = np.asarray(audio, np.float32)
+                    owner[s] = rid
+            self._pump_once()
+            for s in range(self.n_streams):
+                if owner[s] is not None and self._slot_bufs[s].shape[0] < need:
+                    res = self.best(slot=s, final=True)
+                    res["steps"] = int(self._slot_steps[s])
+                    results[owner[s]] = res
+                    owner[s] = None
+        return [results[i] for i in range(len(utterances))]

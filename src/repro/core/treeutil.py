@@ -1,0 +1,23 @@
+"""Pytree helpers for slot-pooled (leading-batch-axis) state.
+
+The multi-stream scheduler keeps every piece of per-stream carried state
+— TDS left-context buffers, decoder BeamState — as a pytree whose leaves
+carry a leading slot axis.  These two helpers are the whole protocol:
+broadcast a single-stream init tree to B slots, and reset one slot back
+to a fresh init tree (utterance boundary in that slot).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batch_tree(tree, batch: int):
+    """Broadcast each leaf x -> (batch,) + x.shape."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (batch,) + x.shape), tree)
+
+
+def set_slot(tree, slot, fresh):
+    """Return `tree` with `fresh` (no slot axis) written into `slot`."""
+    return jax.tree.map(lambda b, i: b.at[slot].set(i), tree, fresh)

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 MASK = -1e30
 
 
@@ -54,7 +56,7 @@ def beam_prune_pallas(scores, beam, *, bn=1024, interpret=False):
         out_shape=jax.ShapeDtypeStruct((Np,), jnp.float32),
         scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
     )(scores)
     return out[:N]

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 MASK = -1e30
 
 
@@ -110,7 +112,7 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=None,
             pltpu.VMEM((block_q, D), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(qr, kr, vr)
     return out.reshape(B, H, Sq, D)

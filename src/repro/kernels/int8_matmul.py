@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _kernel(xq_ref, wq_ref, xs_ref, ws_ref, o_ref, acc_ref, *, nk):
     ik = pl.program_id(2)
@@ -58,6 +60,6 @@ def int8_matmul_pallas(xq, wq, xs, ws, *, bm=128, bn=128, bk=128,
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(xq, wq, xs, ws)

@@ -7,8 +7,12 @@ Two modes:
                  requests; every serve step is one fused decode_step.
   * --mode asr : the paper's system — streaming ASR through the ASRPU
                  command API (configure -> DecodingStep* -> CleanDecoding).
+                 With --streams N > 1, a MultiStreamASRPU slot pool
+                 decodes N concurrent utterances through one vmapped
+                 decoding step (continuous batching, like --mode lm).
 
   PYTHONPATH=src python -m repro.launch.serve --mode asr --utterances 3
+  PYTHONPATH=src python -m repro.launch.serve --mode asr --streams 4
   PYTHONPATH=src python -m repro.launch.serve --mode lm --arch mamba2-1.3b \
       --requests 8 --max-new 32
 """
@@ -50,8 +54,6 @@ def serve_lm(args):
     def admit(slot, rid, prompt):
         nonlocal cache, tokens
         logits, pc = jit_prefill(params, {"tokens": jnp.asarray(prompt)[None]})
-        for name in ("k", "v"):
-            pass
         # write prompt KV into the pooled cache at this slot
         def put(dst, src):
             if dst.ndim >= 3 and src.shape[2] <= dst.shape[2]:
@@ -97,12 +99,11 @@ def serve_lm(args):
     return outputs
 
 
-def serve_asr(args):
-    from repro.configs.tds_asr import (DECODER_CONFIG, FEATURE_CONFIG,
-                                       TDSConfig, TDSStage)
+def asr_demo_system():
+    """Small-TDS ASR system shared by the asr serving paths and
+    benchmarks/run.py (public: external harnesses build on it)."""
+    from repro.configs.tds_asr import DECODER_CONFIG, TDSConfig, TDSStage
     from repro.core import lexicon as lx
-    from repro.core.scheduler import ASRPU
-    from repro.data.pipeline import SyntheticASR
     from repro.models import tds
 
     # small TDS so it runs fast on CPU; same kernel structure
@@ -114,16 +115,28 @@ def serve_asr(args):
              for i in range(12)}
     lex = lx.build_lexicon(words, max_children=16)
     lm = lx.uniform_bigram(len(words))
-
     params = tds.init_tds(jax.random.PRNGKey(0), tds_cfg)
-    asrpu = ASRPU()
+    return tds_cfg, words, lex, lm, params, DECODER_CONFIG
+
+
+def configure_asrpu(asrpu, tds_cfg, lex, lm, dec_cfg, params):
     asrpu.configure_acoustic_scoring(tds_cfg, params)
-    asrpu.configure_hyp_expansion(lex, lm, DECODER_CONFIG)
+    asrpu.configure_hyp_expansion(lex, lm, dec_cfg)
     asrpu.configure_beam_width(25.0)
+
+
+def serve_asr(args):
+    from repro.core.scheduler import ASRPU
+    from repro.data.pipeline import SyntheticASR
+
+    tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
+    asrpu = ASRPU()
+    configure_asrpu(asrpu, tds_cfg, lex, lm, dec_cfg, params)
 
     data = SyntheticASR(words)
     spp = asrpu.plan.samples_per_step
-    for u in range(args.utterances):
+    n_utts = 2 if args.utterances is None else args.utterances
+    for u in range(n_utts):
         utt = data.utterance(u)
         asrpu.clean_decoding()
         t0 = time.time()
@@ -139,6 +152,38 @@ def serve_asr(args):
               f"(ref={utt['words'].tolist()})")
 
 
+def serve_asr_multistream(args):
+    """Multi-stream ASR serving: a B-slot pool of concurrent utterance
+    streams, one vmapped/jitted decoding step advancing all active slots
+    (continuous batching, mirroring serve_lm's slot pool)."""
+    from repro.core.scheduler import MultiStreamASRPU
+    from repro.data.pipeline import SyntheticASR
+
+    tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
+    asrpu = MultiStreamASRPU(args.streams)
+    configure_asrpu(asrpu, tds_cfg, lex, lm, dec_cfg, params)
+
+    data = SyntheticASR(words)
+    # default: one utterance per slot; an explicit --utterances wins
+    # (fewer than --streams just leaves the extra slots masked idle)
+    n_utts = args.utterances if args.utterances is not None \
+        else max(args.streams, 2)
+    utts = [data.utterance(u) for u in range(n_utts)]
+    audio_s = sum(len(u["audio"]) for u in utts) / 16000
+    t0 = time.time()
+    results = asrpu.serve([u["audio"] for u in utts])
+    dt = time.time() - t0
+    for u, (utt, best) in enumerate(zip(utts, results)):
+        print(f"utt {u}: {len(utt['audio'])/16000:.2f}s audio, "
+              f"steps={best['steps']}, best words={best['words'].tolist()} "
+              f"score={best['score']:.2f} (ref={utt['words'].tolist()})")
+    print(f"served {n_utts} utterances ({audio_s:.2f}s audio) over "
+          f"{args.streams} streams in {dt:.2f}s: "
+          f"{asrpu._n_steps} vmapped decoding steps, "
+          f"RTF {dt/audio_s:.2f}, throughput {audio_s/dt:.2f}x realtime")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="asr", choices=["lm", "asr"])
@@ -147,10 +192,17 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--utterances", type=int, default=2)
+    ap.add_argument("--utterances", type=int, default=None,
+                    help="ASR utterance count (default: 2, or one per "
+                         "slot when --streams > 1)")
+    ap.add_argument("--streams", type=int, default=1,
+                    help="ASR slot-pool size; >1 uses the vmapped "
+                         "multi-stream scheduler")
     args = ap.parse_args(argv)
     if args.mode == "lm":
         return serve_lm(args)
+    if args.streams > 1:
+        return serve_asr_multistream(args)
     return serve_asr(args)
 
 

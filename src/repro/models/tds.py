@@ -16,7 +16,7 @@ decoding steps produce bit-identical outputs to offline decoding
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional
 
 import jax
@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.tds_asr import TDSConfig
+from repro.core import treeutil
 
 
 @dataclass(frozen=True)
@@ -143,6 +144,17 @@ def init_stream_state(cfg: TDSConfig) -> dict:
             state[spec.name] = jnp.zeros((spec.kernel - 1, w, c_in),
                                          jnp.float32)
     return state
+
+
+def init_batched_stream_state(cfg: TDSConfig, batch: int) -> dict:
+    """Stream state for `batch` concurrent utterances: (B, k-1, w, c_in)
+    per conv — the per-slot left context of a multi-stream slot pool."""
+    return treeutil.batch_tree(init_stream_state(cfg), batch)
+
+
+def reset_stream_slot(state: dict, slot, cfg: TDSConfig) -> dict:
+    """Zero one slot's left context (utterance boundary in that stream)."""
+    return treeutil.set_slot(state, slot, init_stream_state(cfg))
 
 
 def state_bytes(cfg: TDSConfig, bytes_per_el: int = 1) -> int:

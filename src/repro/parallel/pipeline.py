@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro import compat
 
 
 def pipeline_apply(stage_fn: Callable, stage_params, x_micro, mesh: Mesh,
@@ -64,7 +65,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_micro, mesh: Mesh,
         outs = lax.psum(jnp.where(sid == n_stages - 1, outs, 0.0), axis)
         return outs
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(axis), P()), out_specs=P(),
         check_vma=False)

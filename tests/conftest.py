@@ -1,7 +1,18 @@
 """Test fixtures. NOTE: no XLA_FLAGS here — tests see 1 CPU device; only
 launch/dryrun.py forces the 512-device host platform."""
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# Property tests import `hypothesis`; on interpreters without it, install
+# the deterministic fallback BEFORE test modules are collected so the
+# suite still collects and the property tests run a fixed example sweep.
+sys.path.insert(0, os.path.dirname(__file__))
+import _hypothesis_shim  # noqa: E402
+
+_hypothesis_shim.install()
 
 
 @pytest.fixture(scope="session")

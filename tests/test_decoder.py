@@ -91,6 +91,36 @@ def test_lm_and_word_score_affect_ranking():
     assert float(b_no["score"]) != float(b_lm["score"])
 
 
+def _greedy_reference(lp, blank_id):
+    """Pure-Python CTC greedy: best token/frame, collapse repeats of the
+    previous FRAME (blank separates repeats), drop blanks."""
+    ids = np.argmax(np.asarray(lp), axis=-1)
+    out, prev = [], -1
+    for i in ids:
+        if i != blank_id and i != prev:
+            out.append(int(i))
+        prev = i
+    return out
+
+
+@pytest.mark.parametrize("seed,T,V,blank", [(0, 12, 5, 0), (1, 40, 8, 0),
+                                            (2, 7, 3, 2), (3, 100, 30, 0)])
+def test_greedy_decode_matches_python_reference(seed, T, V, blank):
+    r = np.random.RandomState(seed)
+    lp = jax.nn.log_softmax(jnp.asarray(r.randn(T, V).astype(np.float32)))
+    out = np.asarray(decoder.greedy_decode(lp, blank_id=blank))
+    got = [int(t) for t in out if t >= 0]
+    assert got == _greedy_reference(lp, blank)
+    # -1 padding sits strictly after the emitted prefix
+    assert np.all(out[len(got):] == -1)
+
+
+def test_greedy_decode_all_blanks_is_empty():
+    lp = jnp.log(jnp.asarray([[0.9, 0.05, 0.05]] * 6))
+    out = np.asarray(decoder.greedy_decode(lp, blank_id=0))
+    assert np.all(out == -1)
+
+
 def test_greedy_decode_collapses():
     lp = jnp.log(jnp.asarray([
         [.9, .1, 0], [.1, .9, 0], [.05, .9, .05], [.9, .05, .05],
@@ -98,6 +128,66 @@ def test_greedy_decode_collapses():
     out = np.asarray(decoder.greedy_decode(lp, blank_id=0))
     got = [t for t in out if t >= 0]
     assert got == [1, 1, 2]     # repeat collapsed, blank separates
+
+
+# ---------------------------------------------------------------------------
+# finalize: pending word-final commit
+# ---------------------------------------------------------------------------
+def _state_on_node(lex, lm, node, tokens, k=4):
+    """Beam state whose hyp 0 sits on `node` having emitted `tokens`."""
+    st = decoder.init_state(k, lm)
+    tok_arr = st.tokens.at[0, :len(tokens)].set(jnp.asarray(tokens))
+    return st._replace(
+        pb=st.pb.at[0].set(-1.0), pnb=st.pnb.at[0].set(-0.5),
+        node=st.node.at[0].set(node),
+        last_token=st.last_token.at[0].set(tokens[-1]),
+        tokens=tok_arr, n_tokens=st.n_tokens.at[0].set(len(tokens)))
+
+
+def test_finalize_commits_pending_word_with_lm_score_once():
+    """A hypothesis sitting on a word-final trie node gets its word and
+    LM score applied by finalize exactly once (idempotent thereafter)."""
+    lex = lx.build_lexicon(WORDS, max_children=4)
+    lm = lx.uniform_bigram(len(WORDS))
+    cfg = DecoderConfig(beam_size=4, beam_threshold=1e9,
+                        lm_weight=2.0, word_score=0.75)
+    # node reached by token path [1] is word-final for "a" (wid=1)
+    node_a = int(np.asarray(lex.children)[lex.root,
+                 list(np.asarray(lex.child_token)[lex.root]).index(1)])
+    assert int(np.asarray(lex.word_id)[node_a]) == 1
+    st = _state_on_node(lex, lm, node_a, [1])
+
+    fin = decoder.finalize(st, lex, lm, cfg)
+    bonus = cfg.lm_weight * float(np.asarray(lm.table)[lm.start_state, 1]) \
+        + cfg.word_score
+    assert abs(float(fin.pb[0]) - (-1.0 + bonus)) < 1e-5
+    assert abs(float(fin.pnb[0]) - (-0.5 + bonus)) < 1e-5
+    assert int(fin.n_words[0]) == 1 and int(fin.words[0, 0]) == 1
+    assert int(fin.node[0]) == lex.root
+    assert int(fin.lm_state[0]) == 1          # LM advanced past "a"
+    # exactly once: a second finalize is a no-op (node is back at root)
+    fin2 = decoder.finalize(fin, lex, lm, cfg)
+    for a, b in zip(fin, fin2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_finalize_ignores_non_word_final_and_dead_hypotheses():
+    lex = lx.build_lexicon(WORDS, max_children=4)
+    lm = lx.uniform_bigram(len(WORDS))
+    cfg = DecoderConfig(beam_size=4, beam_threshold=1e9)
+    # node for token path [3] ("cd" prefix "c") is not word-final
+    node_c = int(np.asarray(lex.children)[lex.root,
+                 list(np.asarray(lex.child_token)[lex.root]).index(3)])
+    assert int(np.asarray(lex.word_id)[node_c]) == -1
+    st = _state_on_node(lex, lm, node_c, [3])
+    fin = decoder.finalize(st, lex, lm, cfg)
+    for a, b in zip(st, fin):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # dead (-inf) hypotheses stay dead even on a word-final node
+    dead = decoder.init_state(4, lm)
+    dead = dead._replace(node=dead.node.at[1].set(1))
+    fdead = decoder.finalize(dead, lex, lm, cfg)
+    assert float(hyp.total_score(fdead.pb, fdead.pnb)[1]) < hyp.NEG_INF / 2
 
 
 # ---------------------------------------------------------------------------

@@ -57,7 +57,8 @@ def test_cache_rules_divisible(arch):
     from repro.launch.steps import cache_specs
     from repro.parallel.sharding import cache_shardings
 
-    FakeMesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    from repro.compat import abstract_mesh
+    FakeMesh = abstract_mesh((16, 16), ("data", "model"))
 
     cfg = get_config(arch)
     lm = LM(cfg)
@@ -97,6 +98,7 @@ SUBPROC_COMPILE = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_multidevice_compile_subprocess():
     """lower+compile on an 8-device (pod,data,model) mesh in a subprocess
     (keeps this test process at 1 device)."""
@@ -142,6 +144,7 @@ SUBPROC_PIPELINE = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_pipeline_parallel_subprocess():
     env = dict(os.environ, PYTHONPATH="src")
     r = subprocess.run([sys.executable, "-c", SUBPROC_PIPELINE], env=env,

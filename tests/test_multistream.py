@@ -1,0 +1,199 @@
+"""Multi-stream (batched) ASR serving: parity against the single-stream
+decoder, slot by slot — batched decode, staggered admission through the
+MultiStreamASRPU slot pool, masking of inactive slots, per-slot reset."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.tds_asr import (DecoderConfig, FeatureConfig, TDSConfig,
+                                   TDSStage)
+from repro.core import decoder, lexicon as lx
+from repro.core.scheduler import ASRPU, MultiStreamASRPU
+from repro.data.pipeline import SyntheticASR
+from repro.models import tds
+
+WORDS = {"ab": [1, 2], "a": [1], "cd": [3, 4], "ac": [1, 3], "b": [2]}
+
+TINY_TDS = TDSConfig(
+    stages=(TDSStage(1, 3, 16, 5, 2), TDSStage(1, 4, 16, 5, 2),
+            TDSStage(1, 4, 16, 5, 2)),
+    sub_kernel=6, vocab_size=20)
+FEAT16 = FeatureConfig(n_mels=16, n_mfcc=16)
+
+
+def _asr_words():
+    return {f"w{i}": [1 + (i * 3 + j) % 18 for j in range(2 + i % 3)]
+            for i in range(8)}
+
+
+def _best_tuple(beam_or_dict):
+    if isinstance(beam_or_dict, dict) and "n_words" in beam_or_dict:
+        b = beam_or_dict
+        return (float(b["score"]),
+                tuple(np.asarray(b["words"])[:int(b["n_words"])].tolist()),
+                tuple(np.asarray(b["tokens"])[:int(b["n_tokens"])].tolist()))
+    b = beam_or_dict
+    return (b["score"], tuple(b["words"].tolist()),
+            tuple(b["tokens"].tolist()))
+
+
+# ---------------------------------------------------------------------------
+# batched decoder primitives
+# ---------------------------------------------------------------------------
+def test_expand_step_batched_matches_loop():
+    r = np.random.RandomState(0)
+    lex = lx.build_lexicon(WORDS, max_children=4)
+    lm = lx.uniform_bigram(len(WORDS))
+    cfg = DecoderConfig(beam_size=16, beam_threshold=1e9)
+    B = 3
+    lp = jax.nn.log_softmax(jnp.asarray(r.randn(B, 5).astype(np.float32)))
+    st = decoder.init_batched_state(B, cfg.beam_size, lm)
+    out = decoder.expand_step_batched(st, lp, lex, lm, cfg)
+    for b in range(B):
+        single = decoder.expand_step(decoder.slot_state(st, b), lp[b],
+                                     lex, lm, cfg)
+        for got, want in zip(decoder.slot_state(out, b), single):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed,T", [(0, 6), (1, 8)])
+def test_decode_batched_matches_single(seed, T):
+    r = np.random.RandomState(seed)
+    lex = lx.build_lexicon(WORDS, max_children=4)
+    lm = lx.uniform_bigram(len(WORDS))
+    cfg = DecoderConfig(beam_size=32, beam_threshold=1e9,
+                        lm_weight=1.0, word_score=0.5)
+    B = 4
+    lp = jax.nn.log_softmax(jnp.asarray(r.randn(B, T, 5).astype(np.float32)))
+    batched = decoder.decode_batched(lp, lex, lm, cfg)
+    fin = decoder.finalize_batched(batched, lex, lm, cfg)
+    for b in range(B):
+        ref = decoder.decode(lp[b], lex, lm, cfg)
+        got = decoder.best(decoder.slot_state(batched, b))
+        want = decoder.best(ref)
+        gs, gw, gt = _best_tuple({k: np.asarray(v) for k, v in got.items()})
+        ws, ww, wt = _best_tuple({k: np.asarray(v) for k, v in want.items()})
+        assert abs(gs - ws) < 1e-4
+        assert gw == ww and gt == wt
+        # finalize commutes with batching too
+        fref = decoder.finalize(ref, lex, lm, cfg)
+        fgot = decoder.slot_state(fin, b)
+        np.testing.assert_allclose(np.asarray(fgot.pb), np.asarray(fref.pb),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(fgot.pnb), np.asarray(fref.pnb),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MultiStreamASRPU slot pool
+# ---------------------------------------------------------------------------
+def _make(cls, *args):
+    words = _asr_words()
+    lex = lx.build_lexicon(words, max_children=16)
+    lm = lx.uniform_bigram(len(words))
+    dcfg = DecoderConfig(beam_size=16, beam_threshold=30.0)
+    params = tds.init_tds(jax.random.PRNGKey(0), TINY_TDS)
+    pu = cls(*args)
+    pu.configure_acoustic_scoring(TINY_TDS, params, FEAT16)
+    pu.configure_hyp_expansion(lex, lm, dcfg)
+    return pu, words
+
+
+def test_serve_parity_staggered_admission_and_slot_reuse():
+    """4 utterances over 2 slots: admission is staggered (utterance 2/3
+    enter when a slot frees => per-slot reset) and every slot's result
+    must match the single-stream ASRPU decode of the same utterance."""
+    single, words = _make(ASRPU)
+    multi, _ = _make(MultiStreamASRPU, 2)
+    data = SyntheticASR(words)
+    utts = [data.utterance(i) for i in range(4)]
+
+    refs, single_steps = [], 0
+    for u in utts:
+        single.clean_decoding()
+        single.decoding_step(u["audio"])
+        refs.append(single.best(final=True))
+        single_steps += single._n_steps
+
+    results = multi.serve([u["audio"] for u in utts])
+    for i, (ref, got) in enumerate(zip(refs, results)):
+        rs, rw, rt = _best_tuple(ref)
+        gs, gw, gt = _best_tuple(got)
+        assert gw == rw and gt == rt, i
+        assert abs(gs - rs) < 1e-3, i
+    # batching must actually batch: fewer vmapped steps than the
+    # sequential total of per-utterance steps
+    assert multi._n_steps < single_steps
+
+
+def test_streaming_decoding_step_parity_per_slot():
+    """Chunked streaming into two slots == single-stream chunked decode."""
+    single, words = _make(ASRPU)
+    multi, _ = _make(MultiStreamASRPU, 2)
+    data = SyntheticASR(words)
+    utts = [data.utterance(10), data.utterance(11)]
+
+    refs = []
+    for u in utts:
+        single.clean_decoding()
+        for off in range(0, len(u["audio"]), 640):   # 40ms chunks
+            single.decoding_step(u["audio"][off:off + 640])
+        refs.append(single.best(final=True))
+
+    for s, u in enumerate(utts):
+        for off in range(0, len(u["audio"]), 640):
+            multi.decoding_step(u["audio"][off:off + 640], slot=s)
+    for s, ref in enumerate(refs):
+        got = multi.best(slot=s, final=True)
+        assert _best_tuple(got)[1:] == _best_tuple(ref)[1:], s
+        assert abs(_best_tuple(got)[0] - _best_tuple(ref)[0]) < 1e-3
+
+
+def test_inactive_slot_state_passes_through_unchanged():
+    """A step that only slot 0 can take must leave slot 1's beam and
+    left-context exactly at init (the mask keeps old state bitwise)."""
+    multi, _ = _make(MultiStreamASRPU, 2)
+    audio = np.random.RandomState(0).randn(4000).astype(np.float32)
+    multi.decoding_step(audio, slot=0)
+    assert multi._n_steps >= 1
+    lm = multi._lm
+    init_beam = decoder.init_state(multi._dec_cfg.beam_size, lm)
+    got_beam = decoder.slot_state(multi._beam, 1)
+    for got, want in zip(got_beam, init_beam):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    init_ss = tds.init_stream_state(TINY_TDS)
+    for name, want in init_ss.items():
+        got = np.asarray(multi._stream_state[name][1])
+        np.testing.assert_array_equal(got, np.asarray(want))
+    # ...and slot 0 did advance
+    assert float(decoder.best(decoder.slot_state(multi._beam, 0))["score"]) \
+        > -1e29
+
+
+def test_per_slot_clean_decoding_resets_only_that_slot():
+    multi, words = _make(MultiStreamASRPU, 2)
+    data = SyntheticASR(words)
+    u0, u1 = data.utterance(20), data.utterance(21)
+    # pollute slot 0 with garbage audio; decode u1 into slot 1
+    garbage = np.random.RandomState(1).randn(len(u0["audio"])) \
+        .astype(np.float32)
+    multi.decoding_step(garbage, slot=0)
+    multi.decoding_step(u1["audio"], slot=1)
+    beam1_before = jax.tree.map(np.asarray, decoder.slot_state(multi._beam, 1))
+    # utterance boundary in slot 0 only
+    multi.clean_decoding(slot=0)
+    b0 = multi.best(slot=0)
+    assert b0["score"] == 0.0 and len(b0["words"]) == 0
+    beam1_after = jax.tree.map(np.asarray, decoder.slot_state(multi._beam, 1))
+    for b, a in zip(beam1_before, beam1_after):
+        np.testing.assert_array_equal(b, a)
+    # slot 0 decodes the next utterance from scratch == fresh single stream
+    multi.decoding_step(u0["audio"], slot=0)
+    single, _ = _make(ASRPU)
+    single.decoding_step(u0["audio"])
+    ref = single.best(final=True)
+    got = multi.best(slot=0, final=True)
+    assert _best_tuple(got)[1:] == _best_tuple(ref)[1:]
+    assert abs(_best_tuple(got)[0] - _best_tuple(ref)[0]) < 1e-3

@@ -87,6 +87,7 @@ SUBPROC_FLASH_DECODE = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_flash_decoding_matches_reference_subprocess():
     env = dict(os.environ, PYTHONPATH="src")
     r = subprocess.run([sys.executable, "-c", SUBPROC_FLASH_DECODE],
@@ -122,6 +123,7 @@ SUBPROC_EP_MOE = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_ep_moe_matches_reference_subprocess():
     env = dict(os.environ, PYTHONPATH="src")
     r = subprocess.run([sys.executable, "-c", SUBPROC_EP_MOE],
