@@ -27,11 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import asrpu_model
-from repro.configs.tds_asr import (ASRPU_HW, DECODER_CONFIG, FEATURE_CONFIG,
-                                   TDS_CONFIG, DecoderConfig, FeatureConfig,
-                                   TDSConfig, TDSStage)
+from repro.configs.tds_asr import (FEATURE_CONFIG, TDS_CONFIG, DecoderConfig)
 from repro.core import decoder, features, lexicon as lx
-from repro.core.scheduler import ASRPU, make_step_plan
 from repro.kernels import ops
 from repro.models import tds
 
@@ -91,22 +88,26 @@ def sec54_realtime():
 
 # ---------------------------------------------------------------------------
 def rtf_measured():
-    """Actual CPU wall-clock of the fused decoding step (full TDS)."""
+    """Actual CPU wall-clock of the fused decoding step (full TDS),
+    streamed through one serving-engine session in 80 ms pushes."""
+    from repro.serving import AsrEngine, AsrProgram, EngineConfig
+
     words = {f"w{i}": [1 + (i * 7 + j) % 30 for j in range(3)]
              for i in range(20)}
     lex = lx.build_lexicon(words, max_children=32)
     lm = lx.uniform_bigram(len(words))
     params = tds.init_tds(jax.random.PRNGKey(0), TDS_CONFIG)
-    asrpu = ASRPU()
-    asrpu.configure_acoustic_scoring(TDS_CONFIG, params)
-    asrpu.configure_hyp_expansion(lex, lm, DecoderConfig(beam_size=64))
+    program = AsrProgram(TDS_CONFIG, lex, lm,
+                         dec_cfg=DecoderConfig(beam_size=64))
+    engine = AsrEngine(EngineConfig(program, n_slots=1), params)
     audio = np.random.RandomState(0).randn(16000 * 2).astype(np.float32)
-    spp = asrpu.plan.samples_per_step
-    asrpu.decoding_step(audio[:spp * 2])     # warmup/compile
+    spp = engine.plan.samples_per_step
+    session = engine.open()
+    session.push(audio[:spp * 2]).poll()     # warmup/compile
     t0 = time.perf_counter()
     n = 0
     for off in range(spp * 2, len(audio) - spp, spp):
-        asrpu.decoding_step(audio[off:off + spp])
+        session.push(audio[off:off + spp]).poll()
         n += 1
     dt = time.perf_counter() - t0
     per_step = dt / max(n, 1)
@@ -115,37 +116,29 @@ def rtf_measured():
 
 
 def multistream_throughput():
-    """Sequential vs batched ASR serving over the same utterance set: one
-    ASRPU decoding utterances back-to-back vs a MultiStreamASRPU slot
+    """Sequential vs batched ASR serving over the same utterance set: a
+    1-slot serving engine decoding utterances back-to-back vs a B-slot
     pool advancing all of them through one vmapped decoding step."""
-    from repro.core.scheduler import MultiStreamASRPU
     from repro.data.pipeline import SyntheticASR
-    from repro.launch.serve import asr_demo_system, configure_asrpu
+    from repro.launch.serve import asr_demo_engine
 
-    tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
+    single, words = asr_demo_engine(1)
     data = SyntheticASR(words)
     utts = [data.utterance(i)["audio"] for i in range(4)]
     audio_s = sum(len(a) for a in utts) / 16000
 
-    single = ASRPU()
-    configure_asrpu(single, tds_cfg, lex, lm, dec_cfg, params)
     # warmup must cover the full timed shape (decode + finalize + best +
-    # re-init), not just the fused step, or one-time op tracing lands in
-    # dt_seq and inflates the batched "speedup"
-    single.decoding_step(utts[0])
-    single.best(final=True)
-    single.clean_decoding()
+    # slot reset on re-admission), not just the fused step, or one-time
+    # tracing/compiles land in dt_seq and inflate the batched "speedup"
+    single.serve(utts[:2])
+    single.reset()
     t0 = time.perf_counter()
-    for a in utts:
-        single.clean_decoding()
-        single.decoding_step(a)
-        single.best(final=True)
+    single.serve(utts)        # 1 slot => utterances decode back-to-back
     dt_seq = time.perf_counter() - t0
 
-    multi = MultiStreamASRPU(len(utts))
-    configure_asrpu(multi, tds_cfg, lex, lm, dec_cfg, params)
-    multi.serve(utts[:1])                         # warmup/compile
-    multi.clean_decoding()
+    multi, _ = asr_demo_engine(len(utts))
+    multi.serve(utts[:2])                         # warmup/compile
+    multi.reset()
     t0 = time.perf_counter()
     multi.serve(utts)
     dt_bat = time.perf_counter() - t0

@@ -1,8 +1,11 @@
 """Quickstart: decode one utterance end-to-end on ASRPU (paper §4).
 
 Builds the full pipeline — MFCC features -> TDS acoustic model -> CTC
-beam search over a lexicon trie + bigram LM — behind the accelerator's
-command API, then decodes a synthetic utterance in streaming 80ms steps.
+beam search over a lexicon trie + bigram LM — as a frozen serving
+program (`AsrProgram`: the declarative form of the paper's Table 1
+configure-command sequence), then streams a synthetic utterance through
+a `Session` in 80 ms pushes.  One engine decoding step per full window
+== one DecodingStep command; `finish()` == CleanDecoding + final commit.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,14 +15,12 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "src"))
 
 import jax
-import numpy as np
 
-from repro.configs.tds_asr import (DecoderConfig, FeatureConfig, TDSConfig,
-                                   TDSStage)
+from repro.configs.tds_asr import DecoderConfig, TDSConfig, TDSStage
 from repro.core import lexicon as lx
-from repro.core.scheduler import ASRPU
 from repro.data.pipeline import SyntheticASR
 from repro.models import tds
+from repro.serving import AsrEngine, AsrProgram, EngineConfig
 
 
 def main():
@@ -39,31 +40,34 @@ def main():
     lex = lx.build_lexicon(words, max_children=16)
     lm = lx.uniform_bigram(len(words))
 
-    # 3. configure the accelerator (paper Table 1 command set)
-    asrpu = ASRPU()
-    asrpu.configure_acoustic_scoring(tds_cfg, params)
-    asrpu.configure_hyp_expansion(lex, lm, DecoderConfig(beam_size=32))
-    asrpu.configure_beam_width(25.0)
-    plan = asrpu.plan
+    # 3. one frozen program instead of the mutable configure-command
+    #    sequence (ConfigureASR_* / ConfigureBeamWidth, paper Table 1)
+    program = AsrProgram(tds_cfg, lex, lm,
+                         dec_cfg=DecoderConfig(beam_size=32),
+                         ).with_beam_width(25.0)
+    engine = AsrEngine(EngineConfig(program, n_slots=1), params)
+    plan = engine.plan
     print(f"decoding step plan: {plan.samples_per_step} samples -> "
           f"{plan.feat_frames_per_step} feature frames -> "
           f"{plan.acoustic_frames_per_step} acoustic frame(s), "
           f"{len(plan.kernels)} kernels, {plan.total_threads()} threads")
 
-    # 4. stream one synthetic utterance through DecodingStep commands
+    # 4. stream one synthetic utterance through a serving session
     utt = SyntheticASR(words).utterance(0)
     audio = utt["audio"]
     spp = plan.samples_per_step
+    session = engine.open()
     for off in range(0, len(audio), spp):
-        best = asrpu.decoding_step(audio[off:off + spp])
+        session.push(audio[off:off + spp])
+        best = session.poll()          # live best hypothesis so far
+    best = session.finish()            # end of utterance: commit + free slot
     print(f"decoded {len(audio)/16000:.2f}s of audio in "
-          f"{asrpu._n_steps} decoding steps")
+          f"{best['steps']} decoding steps")
     print(f"best hypothesis: words={best['words'].tolist()} "
           f"tokens={best['tokens'].tolist()} score={best['score']:.2f}")
     print(f"(untrained acoustic model — structure demo; "
           f"reference words were {utt['words'].tolist()})")
-    asrpu.clean_decoding()
-    print("CleanDecoding: hypothesis memory reset")
+    print(f"session {session!r}: slot freed for the next connection")
 
 
 if __name__ == "__main__":

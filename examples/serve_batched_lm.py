@@ -1,9 +1,13 @@
-"""End-to-end serving driver: batched LM inference with slot-based
-continuous batching (the paper's decoding-step structure generalized to
-LM decode — DESIGN.md §4).
+"""End-to-end serving driver: batched LM inference on the unified
+serving engine (repro.serving.LmEngine) — slot-based continuous
+batching, the paper's decoding-step structure generalized to LM decode.
 
 Serves a reduced mamba2 (attention-free: the ASRPU streaming-state model
-maps directly) with batched requests through prefill + fused decode steps.
+maps directly) with batched requests: each request is one `Session`
+(push(prompt) -> poll() for tokens), admission prefills into a pooled
+decode cache with PER-SLOT positions (staggered admissions with unequal
+prompt lengths stay correct), and every serve step is one fused
+decode_step over all slots.
 
   PYTHONPATH=src python examples/serve_batched_lm.py [--arch mamba2-1.3b]
 """

@@ -1,12 +1,14 @@
-"""End-to-end multi-stream ASR serving: a slot pool of concurrent
-utterance streams advanced by ONE vmapped/jitted ASRPU decoding step
-(the ASR twin of examples/serve_batched_lm.py's continuous batching).
+"""End-to-end multi-stream ASR serving on the unified serving engine
+(repro.serving.AsrEngine): a slot pool of concurrent utterance streams
+advanced by ONE vmapped/jitted decoding step (the ASR twin of
+examples/serve_batched_lm.py's continuous batching).
 
-Queued utterances are admitted into freed slots; each slot keeps its own
-sample buffer, TDS left-context, and beam; slots without a full 80 ms
-window are masked so their state passes through unchanged — per-slot
-results match the single-stream decoder's (parity-tested in
-tests/test_multistream.py).
+Each utterance is one `Session`; queued sessions are admitted into freed
+slots; each slot keeps its own sample buffer, TDS left-context, and
+beam; slots without a full 80 ms window are masked so their state passes
+through unchanged — per-slot results match the single-stream decoder's
+(parity-tested in tests/test_multistream.py and tests/test_serving.py,
+including arbitrary-sized `Session.push` chunking).
 
   PYTHONPATH=src python examples/serve_multistream_asr.py [--streams 4]
 """

@@ -18,8 +18,8 @@ inputs each ... 1.4MB" is reproduced by the w=1200 stage).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Sequence, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 
 @dataclass(frozen=True)

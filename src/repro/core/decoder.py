@@ -20,6 +20,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.tds_asr import DecoderConfig
 from repro.core import hypothesis as hyp
@@ -197,6 +198,8 @@ def decode(log_probs: jax.Array, lex: Lexicon, lm: BigramLM,
 # ---------------------------------------------------------------------------
 # batched (multi-stream) decoding: every op above is per-stream pure, so a
 # leading stream axis is one vmap away.  BeamState leaves become (B, K, ...).
+# The slot helpers below are the beam-memory half of the serving engine's
+# slot pool (repro.serving.asr.AsrEngine owns them at runtime).
 # ---------------------------------------------------------------------------
 def init_batched_state(batch: int, k: int, lm: BigramLM) -> BeamState:
     """Beam state for `batch` independent streams: leaves are (B, K, ...)."""
@@ -274,6 +277,26 @@ def best(state: BeamState) -> dict:
     return {"score": hyp.total_score(state.pb, state.pnb)[i],
             "words": state.words[i], "n_words": state.n_words[i],
             "tokens": state.tokens[i], "n_tokens": state.n_tokens[i]}
+
+
+def materialize_best(b: dict) -> dict:
+    """Trim a `best` readout to host arrays: words/tokens cut to their
+    true lengths + float score (the result payload of the serving
+    engine and of the deprecated ASRPU command shims)."""
+    n = int(b["n_words"])
+    return {"words": np.asarray(b["words"])[:n],
+            "tokens": np.asarray(b["tokens"])[:int(b["n_tokens"])],
+            "score": float(b["score"])}
+
+
+def best_hypothesis(state: BeamState, lex: Lexicon, lm: BigramLM,
+                    cfg: DecoderConfig, *, final: bool = False) -> dict:
+    """Materialize the best hypothesis of one (K, ...) beam as host
+    arrays.  final=True first commits a pending utterance-final word
+    (see `finalize`); the input state is not modified."""
+    if final:
+        state = finalize(state, lex, lm, cfg)
+    return materialize_best(best(state))
 
 
 def greedy_decode(log_probs: jax.Array, blank_id: int = 0) -> jax.Array:

@@ -1,6 +1,6 @@
-"""ASRPU runtime: command decoder API + decoding-step scheduler (paper §3).
+"""ASRPU command-API shims over the serving engine (paper §3, Table 1).
 
-The accelerator's command set (Table 1) maps 1:1 onto this class:
+The accelerator's command set maps 1:1 onto these classes:
 
   ConfigureASR_AcousticScoring  -> configure_acoustic_scoring(kernels)
   ConfigureASR_HypExpansion     -> configure_hyp_expansion(expand_fn)
@@ -8,99 +8,38 @@ The accelerator's command set (Table 1) maps 1:1 onto this class:
   DecodingStep                  -> decoding_step(signal_chunk)
   CleanDecoding                 -> clean_decoding()
 
-Decoding steps (§3.1) run the acoustic-scoring phase (the kernel sequence:
-feature extraction + one kernel per DNN layer) and then the
-hypothesis-expansion phase once per emitted acoustic vector.
+DEPRECATED: the mutable configure-command sequence is kept only as the
+paper-shaped surface (and for the parity tests that pin the redesign).
+New code should build a frozen `repro.serving.AsrProgram` /
+`EngineConfig` and stream through `Session.push/poll/finish` — see
+README.md "Serving architecture" for the migration table.  Both shims
+here hold no decoding state of their own: each is a thin adapter that
+accumulates the configure commands into an `AsrProgram` and drives one
+`repro.serving.AsrEngine` slot pool (n_slots=1 for `ASRPU`).
 
-Setup threads (§3.2) become the static `StepPlan`: JAX needs static
-shapes, so the per-kernel setup arithmetic — how many outputs are
-producible from buffered inputs, what to retire, how many threads to
-launch — runs at plan time and fixes the steady-state schedule; a step
-whose buffers cannot produce a single output returns early exactly like a
-setup thread returning zero.  The plan doubles as the driver for the
-paper's instruction-count performance model (benchmarks/).
+`StepPlan`/`make_step_plan` (the setup-thread schedule, §3.2) live in
+core/stepplan.py and are re-exported here for compatibility.
 """
 from __future__ import annotations
 
-from collections import deque
-from dataclasses import dataclass
-from typing import Callable, List, Optional
+from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.tds_asr import (ASRPU_HW, DECODER_CONFIG, FEATURE_CONFIG,
-                                   TDS_CONFIG, DecoderConfig, FeatureConfig,
-                                   TDSConfig)
-from repro.core import decoder as dec
-from repro.core import features
+                                   DecoderConfig, FeatureConfig, TDSConfig)
 from repro.core.lexicon import BigramLM, Lexicon
-from repro.models import tds
-
-
-@dataclass
-class PlannedKernel:
-    """One kernel execution inside a decoding step (Fig. 6)."""
-    name: str
-    kind: str
-    n_threads: int          # threads launched by the ASR controller
-    n_frames: int           # output frames this step
-    macs_per_thread: int    # inner-loop MACs (setup thread metadata)
-    weight_bytes: int
-    n_subkernels: int
-
-
-@dataclass
-class StepPlan:
-    """Static steady-state decoding-step schedule (the setup threads)."""
-    samples_per_step: int
-    feat_frames_per_step: int
-    acoustic_frames_per_step: int   # hyp-expansion repetitions (Fig. 6)
-    kernels: List[PlannedKernel]
-
-    def total_threads(self) -> int:
-        return sum(k.n_threads for k in self.kernels)
-
-
-def make_step_plan(tds_cfg: TDSConfig = TDS_CONFIG,
-                   feat_cfg: FeatureConfig = FEATURE_CONFIG,
-                   step_ms: float = 80.0, beam_k: int = 128) -> StepPlan:
-    """The setup-thread arithmetic for one steady-state decoding step."""
-    samples = int(feat_cfg.sample_rate * step_ms / 1000)
-    feat_frames = int(step_ms / feat_cfg.shift_ms)          # 8 @ 80ms
-    sub = tds_cfg.total_subsample
-    assert feat_frames % sub == 0, (feat_frames, sub)
-    out_frames = feat_frames // sub
-    kernels = [PlannedKernel(
-        "mfcc", "feature", n_threads=feat_frames, n_frames=feat_frames,
-        macs_per_thread=(feat_cfg.frame_len                  # window+preemph
-                         + feat_cfg.n_fft * int(np.log2(feat_cfg.n_fft))
-                         + (feat_cfg.n_fft // 2 + 1) * feat_cfg.n_mels
-                         + feat_cfg.n_mels * feat_cfg.n_mfcc),
-        weight_bytes=0, n_subkernels=1)]
-    t = feat_frames
-    for spec in tds.build_kernel_specs(tds_cfg):
-        t_out = t // spec.stride
-        if spec.kind == "layernorm":
-            kernels.append(PlannedKernel(
-                spec.name, spec.kind, n_threads=t_out, n_frames=t_out,
-                macs_per_thread=2 * spec.n_out, weight_bytes=0,
-                n_subkernels=1))
-        else:
-            # one thread per output neuron per frame (paper §3.1)
-            kernels.append(PlannedKernel(
-                spec.name, spec.kind, n_threads=t_out * spec.n_out,
-                n_frames=t_out, macs_per_thread=spec.n_in,
-                weight_bytes=spec.weight_bytes,
-                n_subkernels=spec.n_subkernels))
-        t = t_out
-    assert t == out_frames, (t, out_frames)
-    return StepPlan(samples, feat_frames, out_frames, kernels)
+from repro.core.stepplan import (PlannedKernel, StepPlan,  # noqa: F401
+                                 make_step_plan)
+from repro.serving import AsrEngine, AsrProgram, EngineConfig
+from repro.serving.asr import empty_hypothesis
 
 
 class ASRPU:
-    """The accelerator, as a streaming decoder object (paper §3/§4)."""
+    """The accelerator as a streaming decoder object — a deprecated shim
+    translating the command API onto a 1-slot serving engine."""
+
+    _n_slots = 1
 
     def __init__(self, hw=ASRPU_HW):
         self.hw = hw
@@ -111,9 +50,9 @@ class ASRPU:
         self._lex: Optional[Lexicon] = None
         self._lm: Optional[BigramLM] = None
         self._use_int8 = False
+        self._step_ms = 80.0
         self.plan: Optional[StepPlan] = None
-        self._jit_step = None
-        self.clean_decoding()
+        self._engine: Optional[AsrEngine] = None
 
     # ---- configuration commands -------------------------------------
     def configure_acoustic_scoring(self, tds_cfg: TDSConfig, params,
@@ -123,114 +62,85 @@ class ASRPU:
         self._tds_cfg, self._params = tds_cfg, params
         self._feat_cfg = feat_cfg
         self._use_int8 = use_int8
+        self._step_ms = step_ms
         self.plan = make_step_plan(tds_cfg, feat_cfg, step_ms,
                                    self._dec_cfg.beam_size)
-        self._build_step()
+        self._reconfigure()
 
     def configure_hyp_expansion(self, lex: Lexicon, lm: BigramLM,
                                 dec_cfg: DecoderConfig = DECODER_CONFIG):
         self._lex, self._lm, self._dec_cfg = lex, lm, dec_cfg
-        if self._tds_cfg is not None:
-            self._build_step()
+        self._reconfigure()
 
     def configure_beam_width(self, beam: float):
         from dataclasses import replace
         self._dec_cfg = replace(self._dec_cfg, beam_threshold=beam)
-        if self._tds_cfg is not None and self._lex is not None:
-            self._build_step()
+        self._reconfigure()
 
+    def _reconfigure(self):
+        """Swap in an engine for the new program.  A configure command
+        between DecodingSteps is legal in the paper's command API, so
+        in-flight decoding state (sample buffers, left context, beam)
+        carries over to the new engine — matching the old behavior of
+        re-jitting the step in place."""
+        old, self._engine = self._engine, None
+        if old is None or self._tds_cfg is None or self._lex is None:
+            return
+        self._require_engine().adopt_state(old)
+
+    # ---- engine assembly --------------------------------------------
+    def _program(self) -> AsrProgram:
+        return AsrProgram(self._tds_cfg, self._lex, self._lm,
+                          self._feat_cfg, self._dec_cfg,
+                          use_int8=self._use_int8, step_ms=self._step_ms)
+
+    def _require_engine(self) -> AsrEngine:
+        assert self._tds_cfg is not None and self._lex is not None, \
+            "accelerator not configured"
+        if self._engine is None:
+            self._engine = AsrEngine(
+                EngineConfig(self._program(), n_slots=self._n_slots),
+                self._params)
+        return self._engine
+
+    @property
+    def _n_steps(self) -> int:
+        return self._engine.n_steps if self._engine is not None else 0
+
+    @property
+    def _beam(self):
+        return self._engine._beam if self._engine is not None else None
+
+    @property
+    def _stream_state(self):
+        return (self._engine._stream_state
+                if self._engine is not None else None)
+
+    # ---- runtime commands -------------------------------------------
     def clean_decoding(self):
         """Reset hypothesis memory + streaming buffers for a new utterance."""
-        self._sample_buf = np.zeros((0,), np.float32)
-        self._stream_state = None
-        self._beam = None
-        self._n_steps = 0
+        if self._engine is not None:
+            self._engine.reset()
 
-    # ---- the fused decoding-step program ------------------------------
-    def _fused_step_fn(self) -> Callable:
-        """The fused single-stream decoding step (acoustic scoring + one
-        hypothesis expansion per emitted acoustic frame).  Pure in all
-        carried state, so the multi-stream scheduler can vmap it over a
-        leading slot axis unchanged."""
-        tds_cfg, feat_cfg = self._tds_cfg, self._feat_cfg
-        dec_cfg, lex, lm = self._dec_cfg, self._lex, self._lm
-        use_int8 = self._use_int8
-        nfr = self.plan.feat_frames_per_step
-
-        def step(params, stream_state, beam_state, samples):
-            feats = features.mfcc(samples, feat_cfg)[:nfr]
-            logp, new_state = tds.forward(params, tds_cfg, feats,
-                                          stream_state, use_int8=use_int8)
-
-            def expand(bs, lp):
-                return dec.expand_step(bs, lp, lex, lm, dec_cfg), None
-            beam_state, _ = jax.lax.scan(expand, beam_state, logp)
-            return new_state, beam_state
-
-        return step
-
-    def _build_step(self):
-        if self._lex is None or self._tds_cfg is None:
-            return
-        self._jit_step = jax.jit(self._fused_step_fn())
-
-    def _window(self):
-        """(retired, needed) samples per decoding step: a step consumes
-        samples_per_step and the MFCC framing additionally needs
-        frame_len - frame_shift lookahead samples in the buffer."""
-        spp = self.plan.samples_per_step
-        look = self._feat_cfg.frame_len - self._feat_cfg.frame_shift
-        return spp, spp + look
-
-    # ---- runtime commands ---------------------------------------------
     def decoding_step(self, signal: np.ndarray):
         """Append `signal` to the stream and run decoding steps for every
         full 80ms window available. Returns the current best hypothesis."""
-        assert self._jit_step is not None, "accelerator not configured"
-        self._sample_buf = np.concatenate([self._sample_buf,
-                                           np.asarray(signal, np.float32)])
-        if self._stream_state is None:
-            self._stream_state = tds.init_stream_state(self._tds_cfg)
-            self._beam = dec.init_state(self._dec_cfg.beam_size, self._lm)
-        spp, need = self._window()
-        while self._sample_buf.shape[0] >= need:
-            chunk = jnp.asarray(self._sample_buf[:need])
-            self._sample_buf = self._sample_buf[spp:]
-            self._stream_state, self._beam = self._jit_step(
-                self._params, self._stream_state, self._beam, chunk)
-            self._n_steps += 1
+        eng = self._require_engine()
+        eng.feed_slot(0, signal)
+        eng.pump()
         return self.best()
 
     def best(self, final: bool = False):
         """Current best hypothesis. final=True commits a pending
         utterance-final word (call when the utterance is known to end)."""
-        if self._beam is None:
-            return {"words": np.zeros((0,), np.int32), "score": -np.inf}
-        return self._best_of(self._beam, final)
-
-    def _best_of(self, beam, final: bool):
-        if final:
-            beam = dec.finalize(beam, self._lex, self._lm, self._dec_cfg)
-        b = dec.best(beam)
-        n = int(b["n_words"])
-        return {"words": np.asarray(b["words"])[:n],
-                "tokens": np.asarray(b["tokens"])[:int(b["n_tokens"])],
-                "score": float(b["score"])}
+        if self._engine is None:
+            return empty_hypothesis()
+        return self._engine.slot_best(0, final=final)
 
 
 class MultiStreamASRPU(ASRPU):
-    """B concurrent utterance streams through ONE vmapped decoding step.
-
-    The single-stream ASRPU advances one `_stream_state`/`_beam` per
-    DecodingStep; at server scale the fused step must run at batch size
-    B.  This scheduler owns a slot pool (mirroring `serve_lm`'s
-    continuous batching): every pytree leaf of the TDS stream state and
-    the BeamState carries a leading slot axis, each slot has its own
-    sample buffer, and one jitted `vmap` of the fused step advances all
-    slots that have a full 80 ms window.  Slots without a full window are
-    masked out — their carried state passes through unchanged, so each
-    slot's trajectory is exactly the single-stream one (parity-tested in
-    tests/test_multistream.py).
+    """B concurrent utterance streams through ONE vmapped decoding step —
+    a deprecated shim over an N-slot `repro.serving.AsrEngine`.
 
     Command API extensions over ASRPU:
       CleanDecoding(slot)   -> clean_decoding(slot=s): reset one stream
@@ -242,117 +152,36 @@ class MultiStreamASRPU(ASRPU):
     def __init__(self, n_streams: int, hw=ASRPU_HW):
         assert n_streams >= 1
         self.n_streams = n_streams
+        self._n_slots = n_streams
         super().__init__(hw)
 
-    # ---- the vmapped fused step --------------------------------------
-    def _build_step(self):
-        if self._lex is None or self._tds_cfg is None:
-            return
-        vstep = jax.vmap(self._fused_step_fn(), in_axes=(None, 0, 0, 0))
-
-        def step(params, stream_state, beam_state, samples, active):
-            new_ss, new_bs = vstep(params, stream_state, beam_state, samples)
-
-            def keep(new, old):
-                m = active.reshape((-1,) + (1,) * (new.ndim - 1))
-                return jnp.where(m, new, old)
-            return (jax.tree.map(keep, new_ss, stream_state),
-                    jax.tree.map(keep, new_bs, beam_state))
-
-        self._jit_step = jax.jit(step)
-
-    # ---- slot-pool state ---------------------------------------------
+    # slot/final are keyword-only: through the ASRPU-typed interface a
+    # positional best(True) would otherwise bind slot=1 silently.
     def clean_decoding(self, slot: Optional[int] = None):
         """Reset all streams (slot=None) or one stream's buffers, left
         context, and hypothesis memory (utterance boundary in a slot)."""
-        if slot is None:
-            self._slot_bufs = [np.zeros((0,), np.float32)
-                               for _ in range(self.n_streams)]
-            self._slot_steps = np.zeros((self.n_streams,), np.int64)
-            self._stream_state = None
-            self._beam = None
-            self._n_steps = 0
+        if self._engine is None:
             return
-        self._slot_bufs[slot] = np.zeros((0,), np.float32)
-        self._slot_steps[slot] = 0
-        if self._stream_state is not None:
-            self._stream_state = tds.reset_stream_slot(
-                self._stream_state, slot, self._tds_cfg)
-            self._beam = dec.reset_slot(self._beam, slot, self._lm)
+        if slot is None:
+            self._engine.reset()
+        else:
+            self._engine.reset_slot(slot)
 
-    def _ensure_state(self):
-        if self._stream_state is None:
-            self._stream_state = tds.init_batched_stream_state(
-                self._tds_cfg, self.n_streams)
-            self._beam = dec.init_batched_state(
-                self.n_streams, self._dec_cfg.beam_size, self._lm)
-
-    def _pump_once(self) -> bool:
-        """One vmapped decoding step advancing every slot that has a full
-        window buffered; masked slots carry state through unchanged.
-        Returns False (and runs nothing) when no slot can produce output
-        — the setup threads all returned zero."""
-        spp, need = self._window()
-        active = np.array([b.shape[0] >= need for b in self._slot_bufs])
-        if not active.any():
-            return False
-        batch = np.zeros((self.n_streams, need), np.float32)
-        for s in range(self.n_streams):
-            if active[s]:
-                batch[s] = self._slot_bufs[s][:need]
-                self._slot_bufs[s] = self._slot_bufs[s][spp:]
-        self._stream_state, self._beam = self._jit_step(
-            self._params, self._stream_state, self._beam,
-            jnp.asarray(batch), jnp.asarray(active))
-        self._slot_steps += active
-        self._n_steps += 1
-        return True
-
-    # ---- runtime commands --------------------------------------------
-    # slot/final are keyword-only: through the ASRPU-typed interface a
-    # positional best(True) would otherwise bind slot=1 silently.
     def decoding_step(self, signal: np.ndarray, *, slot: int = 0):
         """Append `signal` to stream `slot` and advance ALL streams for
         every full window available. Returns slot's best hypothesis."""
-        assert self._jit_step is not None, "accelerator not configured"
-        self._slot_bufs[slot] = np.concatenate(
-            [self._slot_bufs[slot], np.asarray(signal, np.float32)])
-        self._ensure_state()
-        while self._pump_once():
-            pass
+        eng = self._require_engine()
+        eng.feed_slot(slot, signal)
+        eng.pump()
         return self.best(slot=slot)
 
     def best(self, *, slot: int = 0, final: bool = False):
         """Best hypothesis of stream `slot` (see ASRPU.best)."""
-        if self._beam is None:
-            return {"words": np.zeros((0,), np.int32), "score": -np.inf}
-        return self._best_of(dec.slot_state(self._beam, slot), final)
+        if self._engine is None:
+            return empty_hypothesis()
+        return self._engine.slot_best(slot, final=final)
 
     def serve(self, utterances) -> List[dict]:
-        """Continuous batching over whole utterances (audio arrays).
-
-        Queued utterances are admitted into free slots; one vmapped step
-        advances every active slot; a slot whose buffer can no longer
-        fill a window is finalized (pending word committed) and freed for
-        the next queued utterance.  Results come back in input order."""
-        assert self._jit_step is not None, "accelerator not configured"
-        self._ensure_state()
-        _, need = self._window()
-        queue = deque(enumerate(utterances))
-        owner: List[Optional[int]] = [None] * self.n_streams
-        results = {}
-        while queue or any(o is not None for o in owner):
-            for s in range(self.n_streams):
-                if owner[s] is None and queue:
-                    rid, audio = queue.popleft()
-                    self.clean_decoding(slot=s)
-                    self._slot_bufs[s] = np.asarray(audio, np.float32)
-                    owner[s] = rid
-            self._pump_once()
-            for s in range(self.n_streams):
-                if owner[s] is not None and self._slot_bufs[s].shape[0] < need:
-                    res = self.best(slot=s, final=True)
-                    res["steps"] = int(self._slot_steps[s])
-                    results[owner[s]] = res
-                    owner[s] = None
-        return [results[i] for i in range(len(utterances))]
+        """Continuous batching over whole utterances (audio arrays);
+        results in input order.  Delegates to AsrEngine.serve."""
+        return self._require_engine().serve(utterances)

@@ -1,0 +1,81 @@
+"""Static decoding-step schedule — the paper's setup threads (§3.2).
+
+JAX needs static shapes, so the per-kernel setup arithmetic — how many
+outputs are producible from buffered inputs, what to retire, how many
+threads to launch — runs at plan time and fixes the steady-state
+schedule; a step whose buffers cannot produce a single output returns
+early exactly like a setup thread returning zero.  The plan doubles as
+the driver for the paper's instruction-count performance model
+(benchmarks/asrpu_model.py) and as the `Program` schedule of the serving
+engine (repro.serving): one `StepPlan` per configured acoustic program.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from repro.configs.tds_asr import (FEATURE_CONFIG, TDS_CONFIG, FeatureConfig,
+                                   TDSConfig)
+from repro.models import tds
+
+
+@dataclass
+class PlannedKernel:
+    """One kernel execution inside a decoding step (Fig. 6)."""
+    name: str
+    kind: str
+    n_threads: int          # threads launched by the ASR controller
+    n_frames: int           # output frames this step
+    macs_per_thread: int    # inner-loop MACs (setup thread metadata)
+    weight_bytes: int
+    n_subkernels: int
+
+
+@dataclass
+class StepPlan:
+    """Static steady-state decoding-step schedule (the setup threads)."""
+    samples_per_step: int
+    feat_frames_per_step: int
+    acoustic_frames_per_step: int   # hyp-expansion repetitions (Fig. 6)
+    kernels: List[PlannedKernel]
+
+    def total_threads(self) -> int:
+        return sum(k.n_threads for k in self.kernels)
+
+
+def make_step_plan(tds_cfg: TDSConfig = TDS_CONFIG,
+                   feat_cfg: FeatureConfig = FEATURE_CONFIG,
+                   step_ms: float = 80.0, beam_k: int = 128) -> StepPlan:
+    """The setup-thread arithmetic for one steady-state decoding step."""
+    samples = int(feat_cfg.sample_rate * step_ms / 1000)
+    feat_frames = int(step_ms / feat_cfg.shift_ms)          # 8 @ 80ms
+    sub = tds_cfg.total_subsample
+    assert feat_frames % sub == 0, (feat_frames, sub)
+    out_frames = feat_frames // sub
+    kernels = [PlannedKernel(
+        "mfcc", "feature", n_threads=feat_frames, n_frames=feat_frames,
+        macs_per_thread=(feat_cfg.frame_len                  # window+preemph
+                         + feat_cfg.n_fft * int(np.log2(feat_cfg.n_fft))
+                         + (feat_cfg.n_fft // 2 + 1) * feat_cfg.n_mels
+                         + feat_cfg.n_mels * feat_cfg.n_mfcc),
+        weight_bytes=0, n_subkernels=1)]
+    t = feat_frames
+    for spec in tds.build_kernel_specs(tds_cfg):
+        t_out = t // spec.stride
+        if spec.kind == "layernorm":
+            kernels.append(PlannedKernel(
+                spec.name, spec.kind, n_threads=t_out, n_frames=t_out,
+                macs_per_thread=2 * spec.n_out, weight_bytes=0,
+                n_subkernels=1))
+        else:
+            # one thread per output neuron per frame (paper §3.1)
+            kernels.append(PlannedKernel(
+                spec.name, spec.kind, n_threads=t_out * spec.n_out,
+                n_frames=t_out, macs_per_thread=spec.n_in,
+                weight_bytes=spec.weight_bytes,
+                n_subkernels=spec.n_subkernels))
+        t = t_out
+    assert t == out_frames, (t, out_frames)
+    return StepPlan(samples, feat_frames, out_frames, kernels)

@@ -22,7 +22,6 @@ import pathlib
 import time
 import traceback
 
-import jax
 
 from repro.configs import ASSIGNED_ARCHS, LM_SHAPES, get_config
 from repro.launch import roofline as rl

@@ -1,15 +1,19 @@
-"""Serving launcher — batched request decoding, ASRPU-style decoding steps.
+"""Serving launcher — both modes run on the unified serving engine.
 
-Two modes:
+Two modes, one shape (repro.serving): a fixed slot pool owned by an
+`Engine`, advanced by one fused (vmapped) step, with per-connection
+`Session` handles streaming input in and output out:
+
   * --mode lm  : batched LM serving for any --arch (tiny configs on CPU):
-                 slot-based continuous batching — a fixed (batch, cache)
-                 pool; finished sequences free their slot for queued
-                 requests; every serve step is one fused decode_step.
-  * --mode asr : the paper's system — streaming ASR through the ASRPU
-                 command API (configure -> DecodingStep* -> CleanDecoding).
-                 With --streams N > 1, a MultiStreamASRPU slot pool
-                 decodes N concurrent utterances through one vmapped
-                 decoding step (continuous batching, like --mode lm).
+                 an `LmEngine` slot pool with PER-SLOT cache positions,
+                 so staggered admissions with unequal prompt lengths
+                 decode correctly; each serve step is one fused
+                 decode_step over all slots.
+  * --mode asr : the paper's system as an `AsrEngine` — sessions stream
+                 80 ms audio chunks via Session.push/poll/finish; with
+                 --streams N > 1 the N-slot pool decodes N concurrent
+                 utterances through one vmapped decoding step
+                 (continuous batching, like --mode lm).
 
   PYTHONPATH=src python -m repro.launch.serve --mode asr --utterances 3
   PYTHONPATH=src python -m repro.launch.serve --mode asr --streams 4
@@ -22,81 +26,34 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.launch.steps import build_lm
+from repro.serving import (AsrEngine, AsrProgram, EngineConfig, LmEngine,
+                           LmProgram)
 
 
 def serve_lm(args):
     cfg = get_config(args.arch).tiny()
     lm = build_lm(cfg, None)
     params = lm.init(jax.random.PRNGKey(0))
-    B = args.slots
-    cache_len = args.prompt_len + args.max_new
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab_size, args.prompt_len)
                for _ in range(args.requests)]
 
-    # slot pool
-    queue = list(enumerate(prompts))
-    active = {}           # slot -> (request_id, generated list, remaining)
-    outputs = {}
-    cache = lm.init_cache(B, cache_len)
-    tokens = jnp.zeros((B, 1), jnp.int32)
-
-    jit_decode = jax.jit(lm.decode_step)
-    jit_prefill = jax.jit(lm.prefill)
-
-    # simple admission: prefill each request individually into its slot
-    # (a production server batches prefills; slot writes are exact here)
-    def admit(slot, rid, prompt):
-        nonlocal cache, tokens
-        logits, pc = jit_prefill(params, {"tokens": jnp.asarray(prompt)[None]})
-        # write prompt KV into the pooled cache at this slot
-        def put(dst, src):
-            if dst.ndim >= 3 and src.shape[2] <= dst.shape[2]:
-                return dst.at[:, slot:slot+1, :src.shape[2]].set(
-                    src.astype(dst.dtype))
-            return dst.at[:, slot:slot+1].set(src.astype(dst.dtype))
-        cache["layers"] = jax.tree.map(put, cache["layers"], pc["layers"])
-        cache["kpos"] = jnp.maximum(cache["kpos"],
-                                    jnp.arange(cache_len) *
-                                    (jnp.arange(cache_len) < args.prompt_len))
-        cache["kpos"] = cache["kpos"].at[:args.prompt_len].set(
-            jnp.arange(args.prompt_len))
-        cache["offset"] = jnp.full((), args.prompt_len, jnp.int32)
-        first = int(jnp.argmax(logits[0, :cfg.vocab_size]))
-        tokens = tokens.at[slot, 0].set(first)
-        active[slot] = (rid, [first], args.max_new - 1)
+    program = LmProgram(cfg, cache_len=args.prompt_len + args.max_new,
+                        max_new=args.max_new)
+    engine = LmEngine(EngineConfig(program, n_slots=args.slots), params)
 
     t0 = time.time()
-    n_steps = 0
-    while queue or active:
-        for slot in range(B):
-            if slot not in active and queue:
-                rid, prompt = queue.pop(0)
-                admit(slot, rid, prompt)
-        _, tok, cache = jit_decode(params, cache, {"tokens": tokens})
-        n_steps += 1
-        tokens = tok[:, None]
-        done = []
-        for slot, (rid, gen, rem) in active.items():
-            gen.append(int(tok[slot]))
-            rem -= 1
-            active[slot] = (rid, gen, rem)
-            if rem <= 0:
-                outputs[rid] = gen
-                done.append(slot)
-        for slot in done:
-            del active[slot]
+    outputs = engine.serve(prompts)
     dt = time.time() - t0
-    total_tokens = sum(len(v) for v in outputs.values())
+    total_tokens = sum(len(v) for v in outputs)
     print(f"served {len(outputs)} requests, {total_tokens} tokens, "
-          f"{n_steps} decode steps in {dt:.2f}s "
+          f"{engine.n_steps} decode steps in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s)")
-    return outputs
+    return dict(enumerate(outputs))
 
 
 def asr_demo_system():
@@ -119,35 +76,38 @@ def asr_demo_system():
     return tds_cfg, words, lex, lm, params, DECODER_CONFIG
 
 
-def configure_asrpu(asrpu, tds_cfg, lex, lm, dec_cfg, params):
-    asrpu.configure_acoustic_scoring(tds_cfg, params)
-    asrpu.configure_hyp_expansion(lex, lm, dec_cfg)
-    asrpu.configure_beam_width(25.0)
+def asr_demo_engine(n_slots: int) -> tuple:
+    """(engine, words): an AsrEngine over the demo system's program."""
+    tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
+    program = AsrProgram(tds_cfg, lex, lm, dec_cfg=dec_cfg,
+                        ).with_beam_width(25.0)
+    engine = AsrEngine(EngineConfig(program, n_slots=n_slots), params)
+    return engine, words
 
 
 def serve_asr(args):
-    from repro.core.scheduler import ASRPU
+    """Single-stream streaming ASR: one Session per utterance, pushing
+    80 ms chunks; poll() tracks the live best hypothesis."""
     from repro.data.pipeline import SyntheticASR
 
-    tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
-    asrpu = ASRPU()
-    configure_asrpu(asrpu, tds_cfg, lex, lm, dec_cfg, params)
-
+    engine, words = asr_demo_engine(1)
     data = SyntheticASR(words)
-    spp = asrpu.plan.samples_per_step
+    spp = engine.plan.samples_per_step
     n_utts = 2 if args.utterances is None else args.utterances
     for u in range(n_utts):
         utt = data.utterance(u)
-        asrpu.clean_decoding()
         t0 = time.time()
         audio = utt["audio"]
-        # stream in 80ms chunks — one DecodingStep command per chunk
+        session = engine.open()
+        # stream in 80ms chunks — one push per chunk, poll for live best
         for off in range(0, len(audio), spp):
-            best = asrpu.decoding_step(audio[off:off + spp])
+            session.push(audio[off:off + spp])
+            session.poll()
+        best = session.finish()
         dt = time.time() - t0
         rtf = dt / (len(audio) / 16000)
         print(f"utt {u}: {len(audio)/16000:.2f}s audio, decoded in {dt:.2f}s "
-              f"(RTF {rtf:.2f}), steps={asrpu._n_steps}, "
+              f"(RTF {rtf:.2f}), steps={best['steps']}, "
               f"best words={best['words'].tolist()} score={best['score']:.2f} "
               f"(ref={utt['words'].tolist()})")
 
@@ -156,13 +116,9 @@ def serve_asr_multistream(args):
     """Multi-stream ASR serving: a B-slot pool of concurrent utterance
     streams, one vmapped/jitted decoding step advancing all active slots
     (continuous batching, mirroring serve_lm's slot pool)."""
-    from repro.core.scheduler import MultiStreamASRPU
     from repro.data.pipeline import SyntheticASR
 
-    tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
-    asrpu = MultiStreamASRPU(args.streams)
-    configure_asrpu(asrpu, tds_cfg, lex, lm, dec_cfg, params)
-
+    engine, words = asr_demo_engine(args.streams)
     data = SyntheticASR(words)
     # default: one utterance per slot; an explicit --utterances wins
     # (fewer than --streams just leaves the extra slots masked idle)
@@ -171,7 +127,7 @@ def serve_asr_multistream(args):
     utts = [data.utterance(u) for u in range(n_utts)]
     audio_s = sum(len(u["audio"]) for u in utts) / 16000
     t0 = time.time()
-    results = asrpu.serve([u["audio"] for u in utts])
+    results = engine.serve([u["audio"] for u in utts])
     dt = time.time() - t0
     for u, (utt, best) in enumerate(zip(utts, results)):
         print(f"utt {u}: {len(utt['audio'])/16000:.2f}s audio, "
@@ -179,7 +135,7 @@ def serve_asr_multistream(args):
               f"score={best['score']:.2f} (ref={utt['words'].tolist()})")
     print(f"served {n_utts} utterances ({audio_s:.2f}s audio) over "
           f"{args.streams} streams in {dt:.2f}s: "
-          f"{asrpu._n_steps} vmapped decoding steps, "
+          f"{engine.n_steps} vmapped decoding steps, "
           f"RTF {dt/audio_s:.2f}, throughput {audio_s/dt:.2f}x realtime")
     return results
 

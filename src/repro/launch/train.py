@@ -12,7 +12,6 @@ same code path the dry-run lowers.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -13,7 +13,6 @@ All softmax math is fp32 regardless of the activation dtype.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 
@@ -266,7 +265,9 @@ def attention_decode(q, k_cache, v_cache, qpos, kpos, *,
     """Single-token attention against a cache.
 
     q: (B, 1, H, D); caches: (B, Sc, K, D); qpos: (B,) int32;
-    kpos: (Sc,) int32 absolute positions of cache slots (-1 = empty).
+    kpos: (Sc,) int32 absolute positions of cache slots (-1 = empty), or
+    (B, Sc) when each batch row tracks its own positions (per-slot
+    serving cache with staggered admission).
 
     If k_new/v_new (B, 1, K, D) are given, the current token is attended
     as a separate logit column (two-part softmax) so the cache tensor is
@@ -281,9 +282,10 @@ def attention_decode(q, k_cache, v_cache, qpos, kpos, *,
     # mixed-precision dots: never materialize an f32 copy of the KV cache
     s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
-    valid = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+    kp = kpos if kpos.ndim == 2 else kpos[None, :]         # (B|1, Sc)
+    valid = (kp >= 0) & (kp <= qpos[:, None])
     if window is not None:
-        valid &= (qpos[:, None] - kpos[None, :]) < window
+        valid &= (qpos[:, None] - kp) < window
     s = jnp.where(valid[:, None, None, :], s, MASK_VALUE)
     if k_new is not None:
         s_self = jnp.einsum("bkgd,bkd->bkg", qg, k_new[:, 0],

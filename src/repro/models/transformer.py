@@ -17,7 +17,6 @@ Three entry points (all pure functions of (params, ...)):
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -121,7 +120,13 @@ class LM:
             return min(seq_len, self.cfg.attn_window)
         return seq_len
 
-    def init_cache(self, batch: int, seq_len: int) -> dict:
+    def init_cache(self, batch: int, seq_len: int, *,
+                   per_slot: bool = False) -> dict:
+        """Decode cache.  per_slot=True gives every batch row its own
+        position metadata — kpos (B, Sc) and offset (B,) — so a serving
+        slot pool can hold streams at unequal positions (staggered
+        admission with different prompt lengths); the default scalar
+        offset / shared (Sc,) kpos assumes all rows aligned."""
         cfg = self.cfg
         Sc = self.cache_len(seq_len)
         lay = {}
@@ -134,6 +139,10 @@ class LM:
                 one = mamba.init_cache(batch, cfg.d_model, cfg.ssm, self.dtype)
                 lay[f"p{p}"] = jax.tree.map(
                     lambda a: jnp.broadcast_to(a[None], (self.R,) + a.shape), one)
+        if per_slot:
+            return {"layers": lay,
+                    "kpos": jnp.full((batch, Sc), -1, jnp.int32),
+                    "offset": jnp.zeros((batch,), jnp.int32)}
         return {"layers": lay,
                 "kpos": jnp.full((Sc,), -1, jnp.int32),
                 "offset": jnp.zeros((), jnp.int32)}
@@ -203,10 +212,13 @@ class LM:
         k = layers.apply_rope(k, positions, cfg.rope, cfg.rope_theta)
         ipos = positions[..., 0] if cfg.rope == "mrope" else positions
         # the slot being (re)written holds the evicted entry: mask it
-        kpos_m = kpos.at[slot].set(-1)
+        if kpos.ndim == 2:     # per-slot metadata: row b masks slot[b]
+            kpos_m = kpos.at[jnp.arange(B), slot].set(-1)
+        else:
+            kpos_m = kpos.at[slot].set(-1)
         sh = self.sh
         Sc = kv_cache["k"].shape[1]
-        if (sh.mesh is not None and not sh.baseline
+        if (sh.mesh is not None and not sh.baseline and kpos_m.ndim == 1
                 and Sc % sh.mesh.shape["model"] == 0):
             # flash-decoding: partial softmax per model-shard of the
             # sequence-sharded cache; O(B*H*D) combine, no cache gather
@@ -249,10 +261,17 @@ class LM:
     def _scan_layers(self, params, x, positions, cache=None, *, decode=False,
                      remat=False, collect_cache=False):
         kpos = cache["kpos"] if cache is not None else None
-        slot = (cache["offset"] % jnp.int32(max(1, kpos.shape[0]))
+        # per-slot serving cache: offset (B,), kpos (B, Sc) — each batch
+        # row keeps its own write slot / positions (see init_cache)
+        per_slot = decode and cache["offset"].ndim == 1
+        slot = (cache["offset"] % jnp.int32(max(1, kpos.shape[-1]))
                 if decode else None)
         if decode:
-            kpos = kpos.at[slot].set(cache["offset"])
+            if per_slot:
+                rows = jnp.arange(kpos.shape[0])
+                kpos = kpos.at[rows, slot].set(cache["offset"])
+            else:
+                kpos = kpos.at[slot].set(cache["offset"])
 
         if decode:
             # The cache is read via per-layer dynamic-index from a
@@ -282,11 +301,19 @@ class LM:
                 if self._kind(p) == "attn":
                     old = cache["layers"][f"p{p}"]
                     upd = new_slices[f"p{p}"]       # k/v: (R, B, 1, K, Dh)
-                    new_layers[f"p{p}"] = {
-                        name: lax.dynamic_update_slice_in_dim(
-                            old[name], upd[name].astype(old[name].dtype),
-                            slot, axis=2)
-                        for name in ("k", "v")}
+                    if per_slot:
+                        # scatter: row b writes its own cache slot[b]
+                        rows = jnp.arange(old["k"].shape[1])
+                        new_layers[f"p{p}"] = {
+                            name: old[name].at[:, rows, slot].set(
+                                upd[name][:, :, 0].astype(old[name].dtype))
+                            for name in ("k", "v")}
+                    else:
+                        new_layers[f"p{p}"] = {
+                            name: lax.dynamic_update_slice_in_dim(
+                                old[name], upd[name].astype(old[name].dtype),
+                                slot, axis=2)
+                            for name in ("k", "v")}
                 else:
                     new_layers[f"p{p}"] = new_slices[f"p{p}"]
             return x, jnp.zeros((), jnp.float32), {
@@ -398,6 +425,8 @@ class LM:
         x = self._embed(params, batch)
         B = x.shape[0]
         pos = cache["offset"]
+        if pos.ndim == 1:                   # per-slot offsets: (B,) -> (B, 1)
+            pos = pos[:, None]
         positions = self._positions(batch, B, 1, offset=pos)
         x, _, new_cache = self._scan_layers(params, x, positions, cache,
                                             decode=True)

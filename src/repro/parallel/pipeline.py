@@ -12,13 +12,12 @@ Tested on a multi-device host platform subprocess (tests/test_pipeline.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from repro import compat
 
 

@@ -1,0 +1,23 @@
+"""Unified streaming serving API over the ASRPU slot pool.
+
+Three public layers (see ROADMAP.md "Serving architecture"):
+  * `Session`      — one connection: push(chunk)/poll()/finish() for ASR
+                     audio, push(prompt)/poll() for LM tokens.
+  * `Engine`       — owns the slot pool, admission queue, and the single
+                     fused (vmapped) step: `AsrEngine` / `LmEngine`.
+  * `EngineConfig` — frozen declarative spec (`AsrProgram`/`LmProgram`)
+                     replacing the mutable configure_* command sequence.
+
+The deprecated command-API shims (`ASRPU`, `MultiStreamASRPU` in
+repro.core.scheduler) are thin wrappers over `AsrEngine`.
+"""
+from repro.serving.asr import AsrEngine
+from repro.serving.config import (AsrProgram, EngineConfig, LmProgram,
+                                  Program, make_engine)
+from repro.serving.engine import Engine, Session
+from repro.serving.lm import LmEngine
+
+__all__ = [
+    "AsrEngine", "AsrProgram", "Engine", "EngineConfig", "LmEngine",
+    "LmProgram", "Program", "Session", "make_engine",
+]

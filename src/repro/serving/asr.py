@@ -1,0 +1,270 @@
+"""Streaming ASR engine: B utterance slots, ONE vmapped decoding step.
+
+The fused decoding step (paper §3.1: acoustic scoring — MFCC + the TDS
+kernel sequence — then one hypothesis expansion per emitted acoustic
+frame) is pure in all carried state, so the engine vmaps it over a
+leading slot axis: every pytree leaf of the TDS left-context state and
+of the `BeamState` carries a leading slot axis, each slot keeps its own
+sample buffer, and one jitted step advances every slot that has a full
+window buffered.  Slots without a window are masked out — their carried
+state passes through unchanged — so each slot's trajectory is exactly
+the single-stream decoder's.
+
+Window bookkeeping is the setup-thread arithmetic from core/features:
+`frames_producible` decides whether a slot can step (enough buffered
+samples for plan.feat_frames_per_step whole frames) and
+`consumed_samples` decides how many samples a step retires (the MFCC
+framing overlap stays buffered).
+
+Two API layers:
+  * slot level — `feed_slot` / `pump` / `slot_best` / `reset_slot`:
+    direct slot addressing for the deprecated ASRPU command shims
+    (core/scheduler.py).  Do not mix with sessions on the same engine.
+  * session level — `open()` -> Session.push/poll/finish, plus the
+    `serve(utterances)` convenience (continuous batching over whole
+    utterances, results in input order).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decoder as dec
+from repro.core import features
+from repro.models import tds
+from repro.serving.config import AsrProgram, EngineConfig
+from repro.serving.engine import Engine, Session
+
+
+def empty_hypothesis() -> dict:
+    """Readout when no beam exists yet (nothing decoded): same keys as a
+    real `decoder.materialize_best` payload, -inf score."""
+    return {"words": np.zeros((0,), np.int32),
+            "tokens": np.zeros((0,), np.int32), "score": -np.inf}
+
+
+class AsrEngine(Engine):
+    def __init__(self, config: EngineConfig, params):
+        assert isinstance(config.program, AsrProgram), config.program
+        super().__init__(config)
+        self.program: AsrProgram = config.program
+        self.params = params
+        self.plan = self.program.step_plan()
+        fc = self.program.feat_cfg
+        nfr = self.plan.feat_frames_per_step
+        # samples retired per step / needed buffered for a full window
+        self._spp = features.consumed_samples(nfr, fc)
+        self._need = fc.frame_len + (nfr - 1) * fc.frame_shift
+        assert self._spp == self.plan.samples_per_step, \
+            (self._spp, self.plan.samples_per_step)
+        assert features.frames_producible(self._need, fc) == nfr
+        self._jit_step = jax.jit(self._masked_step_fn())
+        self._jit_reset = jax.jit(self._reset_slot_fn())
+        self._jit_best = jax.jit(self._slot_best_fn(final=False))
+        self._jit_best_final = jax.jit(self._slot_best_fn(final=True))
+        self._reset_pool()
+
+    # ---- the fused decoding-step program -----------------------------
+    def _fused_step_fn(self):
+        """Single-slot fused step: acoustic scoring + one hypothesis
+        expansion per emitted acoustic frame.  Pure in carried state."""
+        prog = self.program
+        nfr = self.plan.feat_frames_per_step
+
+        def step(params, stream_state, beam_state, samples):
+            feats = features.mfcc(samples, prog.feat_cfg)[:nfr]
+            logp, new_state = tds.forward(params, prog.tds_cfg, feats,
+                                          stream_state,
+                                          use_int8=prog.use_int8)
+
+            def expand(bs, lp):
+                return dec.expand_step(bs, lp, prog.lex, prog.lm,
+                                       prog.dec_cfg), None
+            beam_state, _ = jax.lax.scan(expand, beam_state, logp)
+            return new_state, beam_state
+
+        return step
+
+    def _masked_step_fn(self):
+        vstep = jax.vmap(self._fused_step_fn(), in_axes=(None, 0, 0, 0))
+
+        def step(params, stream_state, beam_state, samples, active):
+            new_ss, new_bs = vstep(params, stream_state, beam_state, samples)
+
+            def keep(new, old):
+                m = active.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(m, new, old)
+            return (jax.tree.map(keep, new_ss, stream_state),
+                    jax.tree.map(keep, new_bs, beam_state))
+
+        return step
+
+    def _reset_slot_fn(self):
+        """One fused slot reset (utterance boundary): writing the fresh
+        left-context + beam leaves slot-by-slot in eager mode costs an
+        un-jitted scatter per pytree leaf, which dominated sequential
+        serving; fusing them makes admission O(one dispatch)."""
+        prog = self.program
+
+        def reset(stream_state, beam, slot):
+            return (tds.reset_stream_slot(stream_state, slot, prog.tds_cfg),
+                    dec.reset_slot(beam, slot, prog.lm))
+
+        return reset
+
+    def _slot_best_fn(self, final: bool):
+        """Fused slot-slice (+ optional finalize) + argmax readout: the
+        eager version paid one dispatch per BeamState leaf per poll."""
+        prog = self.program
+
+        def f(beam, slot):
+            st = dec.slot_state(beam, slot)
+            if final:
+                st = dec.finalize(st, prog.lex, prog.lm, prog.dec_cfg)
+            return dec.best(st)
+
+        return f
+
+    # ---- slot-pool state ---------------------------------------------
+    def _reset_pool(self) -> None:
+        self._slot_bufs: List[np.ndarray] = [
+            np.zeros((0,), np.float32) for _ in range(self.n_slots)]
+        self._slot_steps = np.zeros((self.n_slots,), np.int64)
+        self._stream_state = None
+        self._beam = None
+
+    def _ensure_state(self) -> None:
+        if self._stream_state is None:
+            self._stream_state = tds.init_batched_stream_state(
+                self.program.tds_cfg, self.n_slots)
+            self._beam = dec.init_batched_state(
+                self.n_slots, self.program.dec_cfg.beam_size,
+                self.program.lm)
+
+    def adopt_state(self, old: "AsrEngine") -> None:
+        """Take over another engine's in-flight slot-pool state (sample
+        buffers, left context, beam, step counts).  Used by the
+        deprecated configure-command shims, which must rebuild the
+        engine on reconfiguration without losing mid-utterance state."""
+        assert old.n_slots == self.n_slots, (old.n_slots, self.n_slots)
+        self._slot_bufs = old._slot_bufs
+        self._slot_steps = old._slot_steps
+        self._stream_state = old._stream_state
+        self._beam = old._beam
+        self.n_steps = old.n_steps
+
+    def reset_slot(self, slot: int) -> None:
+        """Utterance boundary in one slot: clear its buffer, left
+        context, and hypothesis memory; other slots are untouched."""
+        self._slot_bufs[slot] = np.zeros((0,), np.float32)
+        self._slot_steps[slot] = 0
+        if self._stream_state is not None:
+            self._stream_state, self._beam = self._jit_reset(
+                self._stream_state, self._beam, slot)
+
+    def feed_slot(self, slot: int, samples) -> None:
+        """Append raw samples to one slot's stream buffer.  Feeding marks
+        decoding intent, so carried state is initialized here — a best
+        readout after a partial first chunk sees a fresh beam (score 0,
+        no words) rather than the unconfigured -inf sentinel."""
+        self._ensure_state()
+        self._slot_bufs[slot] = np.concatenate(
+            [self._slot_bufs[slot], np.asarray(samples, np.float32)])
+
+    def slot_can_step(self, slot: int) -> bool:
+        """Setup-thread check: a full window of whole frames buffered."""
+        return features.frames_producible(
+            self._slot_bufs[slot].shape[0],
+            self.program.feat_cfg) >= self.plan.feat_frames_per_step
+
+    def _step(self) -> bool:
+        """One vmapped decoding step advancing every slot with a full
+        window; masked slots carry state through unchanged.  False (and
+        nothing runs) when no slot can produce output — all setup
+        threads returned zero."""
+        active = np.array([self.slot_can_step(s)
+                           for s in range(self.n_slots)])
+        if not active.any():
+            return False
+        self._ensure_state()
+        batch = np.zeros((self.n_slots, self._need), np.float32)
+        for s in range(self.n_slots):
+            if active[s]:
+                batch[s] = self._slot_bufs[s][:self._need]
+                self._slot_bufs[s] = self._slot_bufs[s][self._spp:]
+        self._stream_state, self._beam = self._jit_step(
+            self.params, self._stream_state, self._beam,
+            jnp.asarray(batch), jnp.asarray(active))
+        self._slot_steps += active
+        self.n_steps += 1
+        return True
+
+    def pump(self) -> int:
+        """Run decoding steps until no slot has a full window left."""
+        n = 0
+        while self._step():
+            n += 1
+        return n
+
+    def slot_best(self, slot: int, final: bool = False) -> dict:
+        """Best hypothesis of one slot; final=True commits a pending
+        utterance-final word (pure — the stored beam is not advanced)."""
+        if self._beam is None:
+            return empty_hypothesis()
+        fn = self._jit_best_final if final else self._jit_best
+        return dec.materialize_best(fn(self._beam, slot))
+
+    # ---- session mechanics -------------------------------------------
+    def _push(self, session: Session, chunk) -> None:
+        chunk = np.asarray(chunk, np.float32)
+        if session.admitted:
+            self.feed_slot(session.slot, chunk)
+        elif session._pending is None:
+            session._pending = chunk
+        else:
+            session._pending = np.concatenate([session._pending, chunk])
+        self._admit()          # fill freed slots; stepping waits for poll
+
+    def _poll(self, session: Session) -> dict:
+        self._advance()
+        if session.done:
+            return dict(session.result)
+        if session.admitted:
+            res = self.slot_best(session.slot)
+            res["steps"] = int(self._slot_steps[session.slot])
+            return res
+        return self._empty_result()
+
+    def _empty_result(self) -> dict:
+        return dict(empty_hypothesis(), steps=0)
+
+    def _admit_to_slot(self, session: Session, slot: int) -> None:
+        self.reset_slot(slot)
+        if session._pending is not None:
+            self.feed_slot(slot, session._pending)
+
+    def _ready_to_close(self, session: Session, slot: int) -> bool:
+        return session.finished and not self.slot_can_step(slot)
+
+    def _finalize_slot(self, slot: int) -> dict:
+        self._ensure_state()   # finish() before any step still finalizes
+        res = self.slot_best(slot, final=True)
+        res["steps"] = int(self._slot_steps[slot])
+        return res
+
+    # ---- whole-utterance convenience ---------------------------------
+    def serve(self, utterances) -> List[dict]:
+        """Continuous batching over whole utterances (audio arrays):
+        queued utterances are admitted into freed slots, one vmapped
+        step advances every active slot, drained slots are finalized and
+        reused.  Results come back in input order."""
+        sessions = [self.open() for _ in utterances]
+        for sess, audio in zip(sessions, utterances):
+            sess.push(audio)       # buffers + admits only — no steps yet,
+        for sess in sessions:      # so admitted slots step batched below
+            sess.finish()
+        assert all(sess.done for sess in sessions), sessions
+        return [dict(sess.result) for sess in sessions]

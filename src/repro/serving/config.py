@@ -1,0 +1,86 @@
+"""Declarative serving configuration: one frozen `Program` per workload.
+
+The paper's accelerator is configured by a mutable command sequence
+(ConfigureASR_AcousticScoring -> ConfigureASR_HypExpansion ->
+ConfigureBeamWidth).  The serving engine replaces that with a single
+frozen spec: an `AsrProgram` (acoustic model + hypothesis expansion +
+decoding step geometry, compiled into a static `StepPlan`) or an
+`LmProgram` (LM arch + cache/generation budget), wrapped in an
+`EngineConfig` that adds the slot-pool size.  A configured engine never
+mutates its program — reconfiguration means building a new engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Union
+
+from repro.configs.base import ModelConfig
+from repro.configs.tds_asr import (DECODER_CONFIG, FEATURE_CONFIG,
+                                   DecoderConfig, FeatureConfig, TDSConfig)
+from repro.core.lexicon import BigramLM, Lexicon
+from repro.core.stepplan import StepPlan, make_step_plan
+
+
+@dataclass(frozen=True)
+class AsrProgram:
+    """The streaming ASR decoding program (paper §3: one small decoder
+    program per stage — acoustic scoring then hypothesis expansion)."""
+    tds_cfg: TDSConfig
+    lex: Lexicon
+    lm: BigramLM
+    feat_cfg: FeatureConfig = FEATURE_CONFIG
+    dec_cfg: DecoderConfig = DECODER_CONFIG
+    use_int8: bool = False
+    step_ms: float = 80.0
+
+    def step_plan(self) -> StepPlan:
+        """The static setup-thread schedule for one decoding step."""
+        return make_step_plan(self.tds_cfg, self.feat_cfg, self.step_ms,
+                              self.dec_cfg.beam_size)
+
+    def with_beam_width(self, beam: float) -> "AsrProgram":
+        """ConfigureBeamWidth as a pure derivation, not a mutation."""
+        return replace(self, dec_cfg=replace(self.dec_cfg,
+                                             beam_threshold=beam))
+
+
+@dataclass(frozen=True)
+class LmProgram:
+    """Batched LM serving program: arch + pooled-cache geometry."""
+    model_cfg: ModelConfig
+    cache_len: int
+    max_new: int
+
+    def validate_prompt(self, prompt_len: int) -> None:
+        if prompt_len < 1:
+            raise ValueError("prompt must contain at least one token")
+        if prompt_len + self.max_new > self.cache_len:
+            raise ValueError(
+                f"prompt_len={prompt_len} + max_new={self.max_new} exceeds "
+                f"cache_len={self.cache_len}")
+
+
+Program = Union[AsrProgram, LmProgram]
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """A program plus the slot-pool size it is served over."""
+    program: Program
+    n_slots: int = 1
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+
+
+def make_engine(config: EngineConfig, params):
+    """Build the engine matching `config.program`'s workload type."""
+    from repro.serving.asr import AsrEngine
+    from repro.serving.lm import LmEngine
+
+    if isinstance(config.program, AsrProgram):
+        return AsrEngine(config, params)
+    if isinstance(config.program, LmProgram):
+        return LmEngine(config, params)
+    raise TypeError(f"unknown program type: {type(config.program)!r}")

@@ -1,0 +1,197 @@
+"""Engine/Session base: slot pool, admission queue, session lifecycle.
+
+One `Engine` owns a fixed pool of `n_slots` decoding slots advanced by a
+single fused (and, for ASR, vmapped) step — the shape both serving modes
+share.  Callers never touch slots: they `open()` a `Session`, stream
+input with `push`, read output with `poll`, and signal end-of-input with
+`finish`.  The engine admits queued sessions into freed slots
+(continuous batching), steps every slot that can make progress, and
+harvests finished sessions back off the pool.
+
+Scheduling contract: `push` only buffers and admits (so concurrently
+opened sessions share batched steps instead of being drained one by
+one); `poll`/`finish` drive the admit -> step -> harvest loop to
+quiescence.  Per-slot trajectories are independent of scheduling, so
+results are identical however pushes and polls interleave — that is the
+parity property tests/test_serving.py and tests/test_multistream.py pin
+down.
+
+Subclasses implement the slot mechanics:
+  _admit_to_slot(session, slot)  load a queued session's pending input
+  _step() -> bool                one fused step; False = nothing to do
+  _ready_to_close(session, slot) session's slot work is exhausted
+  _finalize_slot(slot) -> dict   result payload for a closing session
+  _poll_active(session) -> dict  live (non-final) output for a session
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional
+
+
+class Session:
+    """Handle for one connection to an engine's slot pool.
+
+    States: queued (no slot yet) -> active (owns a slot) -> done
+    (result available).  `push` feeds input, `poll` reads the current
+    output, `finish` declares end-of-input and returns the final result
+    once the engine has drained the session (None while it is still
+    waiting on a slot held by other sessions)."""
+
+    def __init__(self, engine: "Engine", sid: int):
+        self._engine = engine
+        self.sid = sid
+        self.slot: Optional[int] = None
+        self.finished = False          # finish() called; no more input
+        self.detached = False          # engine was reset under the session
+        self.result: Optional[dict] = None
+        self._pending = None           # mode-specific input awaiting a slot
+
+    @property
+    def admitted(self) -> bool:
+        return self.slot is not None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    def _check_attached(self):
+        if self.detached and not self.done:
+            raise RuntimeError(
+                f"session {self.sid}: engine was reset; session detached")
+
+    def push(self, data):
+        """Stream input into the session (audio chunk / token prompt)."""
+        self._check_attached()
+        if self.finished:
+            raise RuntimeError(f"session {self.sid}: push after finish()")
+        self._engine._push(self, data)
+        return self
+
+    def poll(self) -> dict:
+        """Drive the engine and return this session's current output."""
+        self._check_attached()
+        return self._engine._poll(self)
+
+    def finish(self) -> Optional[dict]:
+        """End-of-input: flush, finalize, free the slot.  Returns the
+        final result, or None if the session is still queued behind
+        unfinished sessions (poll() later to collect it)."""
+        self._check_attached()
+        self.finished = True
+        self._engine._advance()
+        return self.result
+
+    def __repr__(self):
+        state = ("done" if self.done else
+                 "active" if self.admitted else "queued")
+        return f"<Session {self.sid} {state}>"
+
+
+class Engine:
+    """Slot pool + admission queue; see module docstring for the split
+    between this base and the AsrEngine/LmEngine slot mechanics."""
+
+    def __init__(self, config):
+        self.config = config
+        self.n_slots: int = config.n_slots
+        self.n_steps = 0               # fused steps taken since reset
+        self._queue: deque = deque()
+        self._owner: List[Optional[Session]] = [None] * self.n_slots
+        self._next_sid = 0
+
+    # ---- session front-end -------------------------------------------
+    def open(self) -> Session:
+        """Open a connection; the session queues for a slot immediately."""
+        s = Session(self, self._next_sid)
+        self._next_sid += 1
+        self._queue.append(s)
+        self._admit()
+        return s
+
+    def _push(self, session: Session, data) -> None:
+        raise NotImplementedError
+
+    def _poll(self, session: Session) -> dict:
+        raise NotImplementedError
+
+    # ---- the serve loop ----------------------------------------------
+    def _advance(self) -> None:
+        """Admit -> step -> harvest until no progress is possible."""
+        progressed = True
+        while progressed:
+            progressed = self._admit()
+            progressed |= self._step()
+            progressed |= self._harvest()
+
+    def _admit(self) -> bool:
+        did = False
+        for slot in range(self.n_slots):
+            if self._owner[slot] is None and self._queue:
+                sess = next((s for s in self._queue if self._admittable(s)),
+                            None)
+                if sess is None:
+                    break
+                self._queue.remove(sess)
+                self._owner[slot] = sess
+                sess.slot = slot
+                self._admit_to_slot(sess, slot)
+                sess._pending = None
+                did = True
+        return did
+
+    def _harvest(self) -> bool:
+        did = False
+        for slot, sess in enumerate(self._owner):
+            if sess is not None and self._ready_to_close(sess, slot):
+                sess.result = self._finalize_slot(slot)
+                sess.slot = None
+                self._owner[slot] = None
+                did = True
+        # finished sessions that can never be admitted (e.g. an LM
+        # session with no prompt) close from the queue with an empty
+        # result instead of waiting forever
+        for sess in [s for s in self._queue
+                     if s.finished and not self._admittable(s)]:
+            sess.result = self._empty_result()
+            self._queue.remove(sess)
+            did = True
+        return did
+
+    def reset(self) -> None:
+        """Drop all sessions (queued and active) and zero the pool.
+        Dropped sessions are detached: their handles raise on further
+        use instead of silently swallowing input."""
+        for sess in list(self._queue) + self._owner:
+            if sess is not None:
+                sess.detached = True
+                sess.slot = None
+        self._queue.clear()
+        self._owner = [None] * self.n_slots
+        self.n_steps = 0
+        self._reset_pool()
+
+    # ---- slot mechanics (subclass responsibility) --------------------
+    def _admittable(self, session: Session) -> bool:
+        """Whether a queued session may take a slot now (LM sessions
+        must have pushed their prompt first; ASR sessions always may)."""
+        return True
+
+    def _empty_result(self) -> dict:
+        """Result for a session finished with no input at all."""
+        raise NotImplementedError
+
+    def _admit_to_slot(self, session: Session, slot: int) -> None:
+        raise NotImplementedError
+
+    def _step(self) -> bool:
+        raise NotImplementedError
+
+    def _ready_to_close(self, session: Session, slot: int) -> bool:
+        raise NotImplementedError
+
+    def _finalize_slot(self, slot: int) -> dict:
+        raise NotImplementedError
+
+    def _reset_pool(self) -> None:
+        raise NotImplementedError

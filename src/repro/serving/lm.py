@@ -1,0 +1,142 @@
+"""Batched LM serving engine: a fixed (batch, cache) slot pool.
+
+Admission prefills one request into its slot of the pooled decode cache;
+every engine step is one fused `decode_step` over all slots (idle slots
+decode garbage that is simply never read).  Cache position metadata is
+PER SLOT — `kpos` is (B, Sc) and `offset` is (B,) — so staggered
+admissions with unequal prompt lengths keep correct rotary positions and
+cache-write slots per stream (the global-metadata version clobbered
+every stream's offset on each admit; regression-tested in
+tests/test_serving.py).
+
+Session protocol: `push(prompt)` submits the request (prefill happens at
+admission); `poll()` drives the engine — admitted requests generate
+their full `program.max_new` tokens, batched across slots — and returns
+this session's tokens (`done=False` only while no prompt has been
+pushed).  `finish()` is optional for LM sessions; finishing a session
+that never pushed a prompt closes it with an empty result.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import LM
+from repro.serving.config import EngineConfig, LmProgram
+from repro.serving.engine import Engine, Session
+
+
+class LmEngine(Engine):
+    def __init__(self, config: EngineConfig, params):
+        assert isinstance(config.program, LmProgram), config.program
+        super().__init__(config)
+        self.program: LmProgram = config.program
+        self.lm = LM(self.program.model_cfg)
+        self.params = params
+        self._jit_decode = jax.jit(self.lm.decode_step)
+        self._jit_prefill = jax.jit(self.lm.prefill)
+        self._reset_pool()
+
+    # ---- slot-pool state ---------------------------------------------
+    def _reset_pool(self) -> None:
+        B = self.n_slots
+        self.cache = self.lm.init_cache(B, self.program.cache_len,
+                                        per_slot=True)
+        # sliding-window archs clamp the allocated ring to attn_window;
+        # all admission-time position metadata must use the real width
+        self._ring = int(self.cache["kpos"].shape[1])
+        self._tokens = jnp.zeros((B, 1), jnp.int32)
+        self._gen: List[Optional[list]] = [None] * B
+        self._rem = np.zeros((B,), np.int64)
+
+    # ---- session mechanics -------------------------------------------
+    def _admittable(self, session: Session) -> bool:
+        return session._pending is not None    # prompt pushed
+
+    def _push(self, session: Session, prompt) -> None:
+        if session._pending is not None or session.admitted or session.done:
+            raise RuntimeError(
+                f"session {session.sid}: LM sessions take one prompt")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self.program.validate_prompt(prompt.shape[0])
+        session._pending = prompt
+        self._admit()          # prefill now if a slot is free
+
+    def _poll(self, session: Session) -> dict:
+        self._advance()
+        if session.done:
+            return dict(session.result)
+        # _advance runs admitted generation to completion and drains the
+        # queue through freed slots, so the only session left un-done is
+        # one whose prompt has not been pushed yet
+        return {"tokens": [], "done": False}
+
+    def _empty_result(self) -> dict:
+        return {"tokens": [], "done": True}
+
+    def _admit_to_slot(self, session: Session, slot: int) -> None:
+        prompt = session._pending
+        assert prompt is not None, f"session {session.sid} pushed no prompt"
+        plen = int(prompt.shape[0])
+        logits, pc = self._jit_prefill(
+            self.params, {"tokens": jnp.asarray(prompt)[None]})
+
+        # write the prompt KV / SSM state into the pooled cache slot
+        def put(dst, src):
+            src = src.astype(dst.dtype)
+            if dst.ndim >= 3 and src.shape[2] != dst.shape[2]:
+                return dst.at[:, slot:slot + 1, :src.shape[2]].set(src)
+            return dst.at[:, slot:slot + 1].set(src)
+        self.cache["layers"] = jax.tree.map(put, self.cache["layers"],
+                                            pc["layers"])
+        # per-slot position metadata: only THIS slot's row is touched.
+        # A prompt longer than the SWA ring arrives trimmed from prefill
+        # (last `ring` positions at indices 0..ring-1) — mirror that.
+        Sc = self._ring
+        eff = min(plen, Sc)
+        row = jnp.full((Sc,), -1, jnp.int32).at[:eff].set(
+            jnp.arange(plen - eff, plen, dtype=jnp.int32))
+        self.cache["kpos"] = self.cache["kpos"].at[slot].set(row)
+        self.cache["offset"] = self.cache["offset"].at[slot].set(plen)
+
+        vocab = self.program.model_cfg.vocab_size
+        first = int(jnp.argmax(logits[0, :vocab]))
+        self._tokens = self._tokens.at[slot, 0].set(first)
+        self._gen[slot] = [first]
+        self._rem[slot] = self.program.max_new - 1
+
+    def _step(self) -> bool:
+        live = [s for s in range(self.n_slots)
+                if self._owner[s] is not None and self._rem[s] > 0]
+        if not live:
+            return False
+        _, tok, self.cache = self._jit_decode(self.params, self.cache,
+                                              {"tokens": self._tokens})
+        self._tokens = tok[:, None]
+        self.n_steps += 1
+        for s in live:
+            self._gen[s].append(int(tok[s]))
+            self._rem[s] -= 1
+        return True
+
+    def _ready_to_close(self, session: Session, slot: int) -> bool:
+        return self._rem[slot] <= 0
+
+    def _finalize_slot(self, slot: int) -> dict:
+        out = {"tokens": list(self._gen[slot]), "done": True}
+        self._gen[slot] = None
+        return out
+
+    # ---- whole-batch convenience -------------------------------------
+    def serve(self, prompts) -> List[list]:
+        """Continuous batching over a list of prompts; returns the
+        generated token lists in input order."""
+        sessions = [self.open() for _ in prompts]
+        for sess, prompt in zip(sessions, prompts):
+            sess.push(prompt)      # admission/prefill only — steps batch
+        results = [sess.poll() for sess in sessions]
+        assert all(r["done"] for r in results), results
+        return [r["tokens"] for r in results]

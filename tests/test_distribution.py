@@ -1,16 +1,14 @@
 """Distribution tests: sharding-rule divisibility for every arch, tiny-mesh
 compile in a subprocess (multi-device host platform), pipeline parallelism."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import jax
-import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, LM_SHAPES, get_config
+from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.models import LM
 
 

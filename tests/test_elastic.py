@@ -7,7 +7,7 @@ import textwrap
 
 import pytest
 
-from repro.runtime.elastic import RemeshPlan, plan_remesh
+from repro.runtime.elastic import plan_remesh
 
 
 def test_plan_remesh_preserves_model_axis():

@@ -2,7 +2,6 @@
 hand counts (the §Roofline extraction depends on this)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.launch.hlo_cost import analyze_hlo, parse_computations
@@ -89,7 +88,6 @@ def test_bytes_slices_counted_as_slices():
 
 
 def test_collective_ring_factors():
-    import re
     hlo = """
 HloModule m
 ENTRY %main (p: f32[64,64]) -> f32[64,64] {

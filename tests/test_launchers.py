@@ -1,7 +1,6 @@
 """Launcher integration: train loop (loss decreases, ckpt resume) and the
 ASRPU serving path, exercised end-to-end on tiny configs."""
 import numpy as np
-import pytest
 
 
 def test_train_launcher_tiny(tmp_path):

@@ -1,0 +1,382 @@
+"""Unified serving API (repro.serving): chunked-streaming parity of
+`Session.push` against single-shot decoding and against a primitive
+(pre-engine) reference, engine admission edge cases, and the per-slot
+LM cache-metadata regression (staggered admissions with unequal prompt
+lengths)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.tds_asr import (DecoderConfig, FeatureConfig, TDSConfig,
+                                   TDSStage)
+from repro.core import decoder, features, lexicon as lx
+from repro.data.pipeline import SyntheticASR
+from repro.models import LM, tds
+from repro.serving import (AsrEngine, AsrProgram, EngineConfig, LmEngine,
+                           LmProgram)
+
+TINY_TDS = TDSConfig(
+    stages=(TDSStage(1, 3, 16, 5, 2), TDSStage(1, 4, 16, 5, 2),
+            TDSStage(1, 4, 16, 5, 2)),
+    sub_kernel=6, vocab_size=20)
+FEAT16 = FeatureConfig(n_mels=16, n_mfcc=16)
+
+
+def _asr_system():
+    words = {f"w{i}": [1 + (i * 3 + j) % 18 for j in range(2 + i % 3)]
+             for i in range(8)}
+    lex = lx.build_lexicon(words, max_children=16)
+    lm = lx.uniform_bigram(len(words))
+    dcfg = DecoderConfig(beam_size=16, beam_threshold=30.0)
+    params = tds.init_tds(jax.random.PRNGKey(0), TINY_TDS)
+    return words, lex, lm, dcfg, params
+
+
+def _asr_engine(n_slots):
+    words, lex, lm, dcfg, params = _asr_system()
+    program = AsrProgram(TINY_TDS, lex, lm, FEAT16, dcfg)
+    return AsrEngine(EngineConfig(program, n_slots=n_slots), params), words
+
+
+def _same(a, b, tol=1e-3):
+    assert a["words"].tolist() == b["words"].tolist(), (a, b)
+    assert a["tokens"].tolist() == b["tokens"].tolist(), (a, b)
+    assert abs(a["score"] - b["score"]) <= tol, (a, b)
+
+
+# ---------------------------------------------------------------------------
+# chunked-streaming parity
+# ---------------------------------------------------------------------------
+def _reference_decode(audio, words, lex, lm, dcfg, params):
+    """Pre-engine ground truth: the fused decoding step re-derived from
+    the core primitives, with window bookkeeping straight from
+    frames_producible/consumed_samples.  Returns (best dict, n_steps)."""
+    nfr = 8                      # 80 ms / 10 ms shift
+    spp = features.consumed_samples(nfr, FEAT16)
+    need = FEAT16.frame_len + (nfr - 1) * FEAT16.frame_shift
+    ss = tds.init_stream_state(TINY_TDS)
+    bm = decoder.init_state(dcfg.beam_size, lm)
+    buf = np.asarray(audio, np.float32)
+    steps = 0
+    while features.frames_producible(buf.shape[0], FEAT16) >= nfr:
+        feats = features.mfcc(jnp.asarray(buf[:need]), FEAT16)[:nfr]
+        logp, ss = tds.forward(params, TINY_TDS, feats, ss)
+        for t in range(logp.shape[0]):
+            bm = decoder.expand_step(bm, logp[t], lex, lm, dcfg)
+        buf = buf[spp:]
+        steps += 1
+    return decoder.best_hypothesis(bm, lex, lm, dcfg, final=True), steps
+
+
+def test_chunked_push_matches_single_shot_and_reference():
+    """Pushing an utterance in arbitrary-sized chunks must produce the
+    same hypothesis as one single-shot push — and both must match the
+    primitive reference decode (same step count included)."""
+    engine, words = _asr_engine(1)
+    _, lex, lm, dcfg, params = _asr_system()
+    audio = SyntheticASR(words).utterance(3)["audio"]
+    ref, ref_steps = _reference_decode(audio, words, lex, lm, dcfg, params)
+    assert ref_steps > 0
+
+    rng = np.random.RandomState(0)
+    irregular = []
+    off = 0
+    while off < len(audio):
+        n = int(rng.randint(1, 4000))
+        irregular.append(n)
+        off += n
+    for sizes in ([len(audio)],            # single shot
+                  [1280] * (len(audio) // 1280 + 1),   # one window per push
+                  [640] * (len(audio) // 640 + 1),     # half windows
+                  irregular):
+        session = engine.open()
+        off = 0
+        for n in sizes:
+            session.push(audio[off:off + n])
+            off += n
+        got = session.finish()
+        assert got is not None and session.done
+        _same(got, ref)
+        assert got["steps"] == ref_steps
+
+
+def test_poll_is_read_only_on_results():
+    """poll() after finish returns the stored result unchanged."""
+    engine, words = _asr_engine(1)
+    audio = SyntheticASR(words).utterance(1)["audio"]
+    session = engine.open().push(audio)
+    fin = session.finish()
+    again = session.poll()
+    _same(fin, again, tol=0.0)
+    assert again["steps"] == fin["steps"]
+
+
+# ---------------------------------------------------------------------------
+# admission edge cases
+# ---------------------------------------------------------------------------
+def test_more_sessions_than_slots():
+    """5 utterances over 2 slots: queued sessions wait for freed slots;
+    every result matches its dedicated single-slot decode."""
+    engine, words = _asr_engine(2)
+    data = SyntheticASR(words)
+    utts = [data.utterance(i)["audio"] for i in range(5)]
+    results = engine.serve(utts)
+
+    single, _ = _asr_engine(1)
+    for audio, got in zip(utts, results):
+        ref = single.open().push(audio).finish()
+        _same(got, ref)
+
+
+def test_finish_while_others_mid_utterance():
+    """A session finishing early frees its slot and admits the queued
+    session while another stream is still mid-utterance; nobody's
+    hypothesis is disturbed."""
+    engine, words = _asr_engine(2)
+    data = SyntheticASR(words)
+    a0, a1, a2 = [data.utterance(i)["audio"] for i in range(3)]
+
+    s0, s1 = engine.open(), engine.open()
+    s2 = engine.open()                      # queued: both slots taken
+    assert s0.admitted and s1.admitted and not s2.admitted
+    s2.push(a2)
+    # interleave: s1 streams half its audio, s0 finishes early
+    s1.push(a1[:len(a1) // 2])
+    s0.push(a0)
+    r0 = s0.finish()
+    assert r0 is not None and not s2.done
+    assert s2.admitted                      # freed slot went to s2
+    s1.push(a1[len(a1) // 2:])
+    r1 = s1.finish()
+    r2 = s2.poll() if s2.done else s2.finish()
+
+    single, _ = _asr_engine(1)
+    for audio, got in zip((a0, a1, a2), (r0, r1, r2)):
+        ref = single.open().push(audio).finish()
+        _same(got, ref)
+
+
+def test_finish_without_full_window():
+    """finish() on a session that never produced a full 80 ms window
+    (and one that never pushed at all) returns an empty hypothesis."""
+    engine, _ = _asr_engine(2)
+    tiny = engine.open().push(np.zeros((100,), np.float32))
+    empty = engine.open()
+    for sess in (tiny, empty):
+        res = sess.finish()
+        assert res is not None and sess.done
+        assert res["steps"] == 0
+        assert res["words"].tolist() == []
+        assert np.isfinite(res["score"])    # fresh beam, nothing pruned
+    # the pool is fully free again: two new sessions admit immediately
+    s2, s3 = engine.open(), engine.open()
+    assert s2.admitted and s3.admitted
+
+
+def test_push_after_finish_rejected():
+    engine, _ = _asr_engine(1)
+    s = engine.open()
+    s.push(np.zeros((100,), np.float32))
+    s.finish()
+    try:
+        s.push(np.zeros((100,), np.float32))
+        raise AssertionError("push after finish must raise")
+    except RuntimeError:
+        pass
+
+
+def test_engine_reset_detaches_live_sessions():
+    """reset() must not leave live session handles silently swallowing
+    input: detached sessions raise; completed sessions keep results."""
+    engine, words = _asr_engine(1)
+    done = engine.open().push(SyntheticASR(words).utterance(0)["audio"])
+    done_res = done.finish()
+    live = engine.open().push(np.zeros((2000,), np.float32))
+    engine.reset()
+    for op in (lambda: live.push(np.zeros((100,), np.float32)),
+               live.poll, live.finish):
+        try:
+            op()
+            raise AssertionError("detached session must raise")
+        except RuntimeError:
+            pass
+    # a completed session's result survives the reset
+    _same(done.poll(), done_res, tol=0.0)
+    # and the pool itself is fresh
+    assert engine.open().admitted and engine.n_steps == 0
+
+
+# ---------------------------------------------------------------------------
+# deprecated command-API shim fidelity (repro.core.scheduler over the engine)
+# ---------------------------------------------------------------------------
+def test_shim_configure_between_decoding_steps_keeps_state():
+    """ConfigureBeamWidth between DecodingStep commands is legal in the
+    paper's command API: in-flight buffers/left-context/beam must carry
+    over to the reconfigured engine, not silently reset."""
+    from repro.core.scheduler import ASRPU
+
+    words, lex, lm, dcfg, params = _asr_system()
+    audio = SyntheticASR(words).utterance(2)["audio"]
+    pu = ASRPU()
+    pu.configure_acoustic_scoring(TINY_TDS, params, FEAT16)
+    pu.configure_hyp_expansion(lex, lm, dcfg)
+    pu.decoding_step(audio[: len(audio) // 2])
+    n1 = pu._n_steps
+    assert n1 > 0
+    pu.configure_beam_width(25.0)
+    assert pu._n_steps == n1            # state survived reconfiguration
+    best = pu.decoding_step(audio[len(audio) // 2:])
+    assert pu._n_steps > n1
+    assert np.isfinite(best["score"])
+
+
+def test_shim_best_after_partial_first_chunk():
+    """decoding_step with less than one window initializes the beam
+    (old ASRPU behavior): best() reads a fresh hypothesis — score 0,
+    empty words AND a tokens key — not the unconfigured -inf sentinel."""
+    from repro.core.scheduler import ASRPU
+
+    _, lex, lm, dcfg, params = _asr_system()
+    pu = ASRPU()
+    pu.configure_acoustic_scoring(TINY_TDS, params, FEAT16)
+    pu.configure_hyp_expansion(lex, lm, dcfg)
+    best = pu.decoding_step(np.zeros((100,), np.float32))
+    assert pu._n_steps == 0
+    assert best["score"] == 0.0
+    assert best["words"].tolist() == [] and best["tokens"].tolist() == []
+
+
+# ---------------------------------------------------------------------------
+# LM engine: per-slot cache metadata
+# ---------------------------------------------------------------------------
+def test_lm_staggered_unequal_prompts_regression():
+    """Two concurrent requests with different prompt lengths (slot
+    offsets 5 vs 9) plus a queued third admitted into a reused slot:
+    every token stream must equal its dedicated single-slot decode.
+    The pre-redesign serve_lm admit() overwrote the GLOBAL cache
+    kpos/offset on every admission, corrupting concurrent streams."""
+    cfg = get_config("chatglm3-6b").tiny()   # attention: positions matter
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    program = LmProgram(cfg, cache_len=24, max_new=6)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, n) for n in (5, 9, 7)]
+
+    engine = LmEngine(EngineConfig(program, n_slots=2), params)
+    got = engine.serve(prompts)
+    assert engine.n_steps < 3 * (program.max_new - 1)   # batching batched
+
+    for prompt, tokens in zip(prompts, got):
+        ref = LmEngine(EngineConfig(program, n_slots=1),
+                       params).serve([prompt])[0]
+        assert tokens == ref
+        assert len(tokens) == program.max_new
+
+
+def test_lm_session_poll_protocol():
+    cfg = get_config("mamba2-1.3b").tiny()
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    program = LmProgram(cfg, cache_len=16, max_new=4)
+    engine = LmEngine(EngineConfig(program, n_slots=2), params)
+    s = engine.open()
+    assert s.poll() == {"tokens": [], "done": False}
+    prompt = np.arange(1, 6, dtype=np.int32)
+    out = s.push(prompt).poll()
+    assert out["done"] and len(out["tokens"]) == 4
+    # prompt too long for the cache, or empty, is rejected up front
+    # (admission would otherwise crash mid-prefill and strand the slot)
+    for bad in (np.ones((20,), np.int32), np.zeros((0,), np.int32)):
+        try:
+            engine.open().push(bad)
+            raise AssertionError("invalid prompt must raise")
+        except ValueError:
+            pass
+    # finish() on a session that never pushed a prompt closes it with an
+    # empty result instead of queueing forever
+    idle = engine.open()
+    res = idle.finish()
+    assert res == {"tokens": [], "done": True}
+    assert idle.poll() == {"tokens": [], "done": True}
+    assert idle not in engine._queue
+
+
+def test_lm_swa_ring_cache_admission():
+    """Sliding-window archs clamp the allocated cache ring to
+    attn_window < cache_len: admission must size its per-slot kpos rows
+    from the real ring (a cache_len-sized row used to crash the set),
+    including a prompt longer than the ring (trimmed by prefill)."""
+    cfg = get_config("h2o-danube-1.8b").tiny()       # attn_window = 64
+    assert cfg.attn_window is not None
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    program = LmProgram(cfg, cache_len=128, max_new=4)
+    rng = np.random.default_rng(2)
+    # 9 / 32: shorter than the ring; 96: longer (prefill trims to the
+    # ring) — lengths chosen divisible into prefill's attention chunks
+    prompts = [rng.integers(1, cfg.vocab_size, n) for n in (32, 9, 96)]
+    engine = LmEngine(EngineConfig(program, n_slots=2), params)
+    assert engine._ring == cfg.attn_window
+    got = engine.serve(prompts)
+    assert all(len(t) == program.max_new for t in got)
+    for prompt, tokens in zip(prompts, got):
+        ref = LmEngine(EngineConfig(program, n_slots=1),
+                       params).serve([prompt])[0]
+        assert tokens == ref
+
+
+def test_lm_per_slot_cache_matches_scalar_cache():
+    """Model-level check of the per-slot decode path: a pooled per-slot
+    cache holding two streams at different offsets decodes each row
+    exactly as the scalar-offset cache decodes it alone."""
+    cfg = get_config("chatglm3-6b").tiny()
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    Sc = 20
+    rng = np.random.default_rng(1)
+    pA = rng.integers(1, cfg.vocab_size, 4)
+    pB = rng.integers(1, cfg.vocab_size, 8)
+
+    def put(dst, src, slot):
+        src = src.astype(dst.dtype)
+        if dst.ndim >= 3 and src.shape[2] != dst.shape[2]:
+            return dst.at[:, slot:slot + 1, :src.shape[2]].set(src)
+        return dst.at[:, slot:slot + 1].set(src)
+
+    def ref_decode(prompt, n_new):
+        logits, pc = lm.prefill(params, {"tokens": jnp.asarray(prompt)[None]})
+        cache = lm.init_cache(1, Sc)
+        cache["layers"] = jax.tree.map(lambda d, s: put(d, s, 0),
+                                       cache["layers"], pc["layers"])
+        L = len(prompt)
+        cache["kpos"] = cache["kpos"].at[:L].set(jnp.arange(L))
+        cache["offset"] = jnp.full((), L, jnp.int32)
+        toks = [int(jnp.argmax(logits[0, :cfg.vocab_size]))]
+        for _ in range(n_new - 1):
+            _, tok, cache = lm.decode_step(
+                params, cache, {"tokens": jnp.asarray([toks[-1:]])})
+            toks.append(int(tok[0]))
+        return toks
+
+    refA, refB = ref_decode(pA, 5), ref_decode(pB, 5)
+
+    cache = lm.init_cache(2, Sc, per_slot=True)
+    assert cache["kpos"].shape == (2, Sc) and cache["offset"].shape == (2,)
+    tokens = jnp.zeros((2, 1), jnp.int32)
+    gen = {0: [], 1: []}
+    for slot, prompt in ((0, pA), (1, pB)):
+        logits, pc = lm.prefill(params, {"tokens": jnp.asarray(prompt)[None]})
+        cache["layers"] = jax.tree.map(lambda d, s: put(d, s, slot),
+                                       cache["layers"], pc["layers"])
+        L = len(prompt)
+        row = jnp.full((Sc,), -1, jnp.int32).at[:L].set(jnp.arange(L))
+        cache["kpos"] = cache["kpos"].at[slot].set(row)
+        cache["offset"] = cache["offset"].at[slot].set(L)
+        first = int(jnp.argmax(logits[0, :cfg.vocab_size]))
+        tokens = tokens.at[slot, 0].set(first)
+        gen[slot].append(first)
+    for _ in range(4):
+        _, tok, cache = lm.decode_step(params, cache, {"tokens": tokens})
+        tokens = tok[:, None]
+        gen[0].append(int(tok[0]))
+        gen[1].append(int(tok[1]))
+    assert gen[0] == refA
+    assert gen[1] == refB

@@ -1,6 +1,5 @@
 """Substrate tests: optimizer, quantization, checkpointing, fault
 tolerance, data pipeline, gradient compression."""
-import os
 import pathlib
 
 import jax
