@@ -1,6 +1,13 @@
 """Benchmark harness — one function per paper table/figure + system benches.
 
 Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+``--rows`` selects row groups (``paper``, ``decode``, ``kernels``,
+``dryrun``, or ``all``); ``--json PATH`` additionally writes the
+name -> µs mapping as JSON (the CI bench-smoke job uploads
+``BENCH_decode.json`` built from the kernel + decode groups; the copy
+at the repo root records the perf trajectory, including the
+pre-refactor sequential-vs-batched decode rows under ``*_pre_refactor``
+keys).
 
   fig9_layer_sizes    — paper Fig. 9: TDS layer weight sizes (KB)
   fig11_kernel_times  — paper Fig. 11: per-kernel exec time via the
@@ -205,6 +212,18 @@ def kernel_benches():
     us, _ = _timeit(lambda: ops.beam_prune(sc, 25.0), n=3, warmup=1)
     row("kernel_beam_prune_8448", us, "hypothesis_unit_threshold")
 
+    # fused hypothesis unit: merge + threshold + top-k in one op over a
+    # beam-128 / 32-children candidate set (N = 128 * 65), batch of 4
+    # slots — the decode hot path's shape
+    hh = jnp.asarray(R.randint(0, 4096, (4, 8320)).astype(np.int32))
+    hp = jnp.asarray((R.randn(4, 8320) * 3).astype(np.float32))
+    hq = jnp.asarray((R.randn(4, 8320) * 3).astype(np.float32))
+    ref_policy = ops.KernelPolicy("ref")
+    us, _ = _timeit(lambda: ops.hypothesis_unit(hh, hp, hq, 128, 25.0,
+                                                policy=ref_policy),
+                    n=3, warmup=1)
+    row("kernel_hypothesis_unit_b4_n8320", us, "fused_merge+threshold+topk")
+
     xc = jnp.asarray(R.randn(8 + 64, 80, 15).astype(np.float32))
     wc = jnp.asarray(R.randn(9, 15, 15).astype(np.float32) * 0.1)
     bc = jnp.zeros((15,), jnp.float32)
@@ -236,16 +255,51 @@ def dryrun_summary():
     row("dryrun_worst_cell", worst[0] * 1e6, worst[1])
 
 
-def main() -> None:
+GROUPS = {
+    "paper": (fig9_layer_sizes, fig11_kernel_times, sec54_realtime),
+    "decode": (beam_throughput, multistream_throughput, rtf_measured),
+    "kernels": (kernel_benches,),
+    "dryrun": (dryrun_summary,),
+}
+GROUP_ORDER = ("paper", "decode", "kernels", "dryrun")
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rows", default="all",
+                    help="comma-separated row groups to run: "
+                         f"{', '.join(GROUP_ORDER)} or all")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the name -> us_per_call mapping as "
+                         "JSON (e.g. BENCH_decode.json at the repo root)")
+    args = ap.parse_args(argv)
+
+    wanted = [g.strip() for g in args.rows.split(",") if g.strip()]
+    if "all" in wanted:
+        wanted = list(GROUP_ORDER)
+    unknown = set(wanted) - set(GROUPS)
+    if unknown:
+        ap.error(f"unknown row group(s): {sorted(unknown)}")
+
     print("name,us_per_call,derived")
-    fig9_layer_sizes()
-    fig11_kernel_times()
-    sec54_realtime()
-    beam_throughput()
-    multistream_throughput()
-    kernel_benches()
-    rtf_measured()
-    dryrun_summary()
+    for group in GROUP_ORDER:
+        if group in wanted:
+            for fn in GROUPS[group]:
+                fn()
+
+    if args.json:
+        path = pathlib.Path(args.json)
+        # merge-update: rows not re-measured this run (other groups,
+        # recorded *_pre_refactor trajectory keys) are preserved
+        payload = {}
+        if path.exists():
+            payload = json.loads(path.read_text())
+        payload.update({name: round(us, 2) for name, us, _ in ROWS})
+        path.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {len(ROWS)} rows to {path} "
+              f"({len(payload)} total)", flush=True)
 
 
 if __name__ == "__main__":

@@ -76,22 +76,32 @@ def _append(arr, n, val):
     return jnp.where(onehot, val[:, None], arr)
 
 
-def expand_step(state: BeamState, log_probs: jax.Array, lex: Lexicon,
-                lm: BigramLM, cfg: DecoderConfig,
-                use_pallas_prune: bool = False) -> BeamState:
-    """One hypothesis-expansion execution over one acoustic frame."""
-    K = state.hash.shape[0]
+def expand_step_batched(state: BeamState, log_probs: jax.Array, lex: Lexicon,
+                        lm: BigramLM, cfg: DecoderConfig,
+                        kernels=None) -> BeamState:
+    """One natively batched hypothesis-expansion execution.
+
+    state: (B, K, ...) BeamState; log_probs: (B, V) — one acoustic frame
+    per stream.  The lexicon trie and bigram table are SHARED across
+    slots: every gather (`children`/`child_token`/`word_id`, bigram
+    scores) runs once over the flattened (B*K,) / (B*K*C,) index set
+    instead of per slot (the old path vmapped the whole per-stream step,
+    re-gathering the shared tables slot by slot).  The merge/threshold/
+    top-k lands in the fused hypothesis unit with a batch grid axis."""
+    B, K = state.hash.shape
     C = lex.max_children
-    lp = log_probs.astype(jnp.float32)
-    tot = hyp.total_score(state.pb, state.pnb)
+    lp = log_probs.astype(jnp.float32)                   # (B, V)
+    tot = hyp.total_score(state.pb, state.pnb)           # (B, K)
     alive = tot > NEG_INF / 2
 
     # ---- stay candidates (blank + repeat), one per hypothesis ----------
-    lp_last = jnp.where(state.last_token >= 0,
-                        lp[jnp.maximum(state.last_token, 0)], NEG_INF)
+    lp_last = jnp.where(
+        state.last_token >= 0,
+        jnp.take_along_axis(lp, jnp.maximum(state.last_token, 0), axis=1),
+        NEG_INF)                                         # (B, K)
     stay = hyp.Candidates(
         hash=state.hash,
-        pb=jnp.where(alive, tot + lp[cfg.blank_id], NEG_INF),
+        pb=jnp.where(alive, tot + lp[:, cfg.blank_id][:, None], NEG_INF),
         pnb=jnp.where(alive, state.pnb + lp_last, NEG_INF),
         fields=dict(node=state.node, lm_state=state.lm_state,
                     last_token=state.last_token, tokens=state.tokens,
@@ -99,84 +109,96 @@ def expand_step(state: BeamState, log_probs: jax.Array, lex: Lexicon,
                     n_words=state.n_words),
     )
 
-    # ---- extension candidates (continue / commit), K x C each ----------
-    child = lex.children[state.node]                     # (K, C)
-    ctok = lex.child_token[state.node]                   # (K, C)
+    # ---- extension candidates (continue / commit), K x C per slot ------
+    # shared-lexicon gathers: one flattened (B*K,) index set
+    nodes_f = state.node.reshape(B * K)
+    child = lex.children[nodes_f].reshape(B, K, C)
+    ctok = lex.child_token[nodes_f].reshape(B, K, C)
     has_child = child >= 0
     ctok_s = jnp.maximum(ctok, 0)
-    lp_ext = jnp.where(has_child, lp[ctok_s], NEG_INF)   # (K, C)
+    lp_ext = jnp.where(
+        has_child,
+        jnp.take_along_axis(lp, ctok_s.reshape(B, K * C),
+                            axis=1).reshape(B, K, C),
+        NEG_INF)                                         # (B, K, C)
     # CTC merge rule: extending with the last token needs a blank in between
-    same = ctok_s == state.last_token[:, None]
-    base = jnp.where(same, state.pb[:, None], tot[:, None])
-    pnb_ext = jnp.where(alive[:, None], base + lp_ext, NEG_INF)  # (K, C)
+    same = ctok_s == state.last_token[:, :, None]
+    base = jnp.where(same, state.pb[:, :, None], tot[:, :, None])
+    pnb_ext = jnp.where(alive[:, :, None], base + lp_ext, NEG_INF)
 
-    h_ext = _mix(state.hash[:, None], ctok_s * 2)        # continue-hash
+    h_ext = _mix(state.hash[:, :, None], ctok_s * 2)     # continue-hash
     new_tokens = _append(
-        jnp.broadcast_to(state.tokens[:, None], (K, C, MAX_TOKENS)
-                         ).reshape(K * C, MAX_TOKENS),
-        jnp.broadcast_to(state.n_tokens[:, None], (K, C)).reshape(-1),
-        ctok_s.reshape(-1)).reshape(K, C, MAX_TOKENS)
-    n_tok_ext = state.n_tokens[:, None] + 1
+        jnp.broadcast_to(state.tokens[:, :, None], (B, K, C, MAX_TOKENS)
+                         ).reshape(B * K * C, MAX_TOKENS),
+        jnp.broadcast_to(state.n_tokens[:, :, None], (B, K, C)).reshape(-1),
+        ctok_s.reshape(-1)).reshape(B, K, C, MAX_TOKENS)
+    n_tok_ext = state.n_tokens[:, :, None] + 1
+    lm_state_b = jnp.broadcast_to(state.lm_state[:, :, None], (B, K, C))
 
     def flat(x):
-        return x.reshape((K * C,) + x.shape[2:])
+        return x.reshape((B, K * C) + x.shape[3:])
 
     cont = hyp.Candidates(
         hash=flat(h_ext),
-        pb=jnp.full((K * C,), NEG_INF),
+        pb=jnp.full((B, K * C), NEG_INF),
         pnb=flat(pnb_ext),
         fields=dict(
             node=flat(child),
-            lm_state=flat(jnp.broadcast_to(state.lm_state[:, None], (K, C))),
+            lm_state=flat(lm_state_b),
             last_token=flat(ctok_s),
             tokens=flat(new_tokens),
-            n_tokens=flat(jnp.broadcast_to(n_tok_ext, (K, C))),
-            words=flat(jnp.broadcast_to(state.words[:, None],
-                                        (K, C, MAX_WORDS))),
-            n_words=flat(jnp.broadcast_to(state.n_words[:, None], (K, C))),
+            n_tokens=flat(jnp.broadcast_to(n_tok_ext, (B, K, C))),
+            words=flat(jnp.broadcast_to(state.words[:, :, None],
+                                        (B, K, C, MAX_WORDS))),
+            n_words=flat(jnp.broadcast_to(state.n_words[:, :, None],
+                                          (B, K, C))),
         ),
     )
 
-    wid = jnp.where(has_child, lex.word_id[jnp.maximum(child, 0)], -1)  # (K,C)
+    wid = jnp.where(
+        has_child,
+        lex.word_id[jnp.maximum(child, 0).reshape(B * K * C)
+                    ].reshape(B, K, C),
+        -1)
     is_word = wid >= 0
     wid_s = jnp.maximum(wid, 0)
-    lm_sc = lm.score(jnp.broadcast_to(state.lm_state[:, None], (K, C)), wid_s)
+    lm_sc = lm.score(lm_state_b, wid_s)    # one shared bigram-table gather
     commit_pnb = jnp.where(is_word,
                            pnb_ext + cfg.lm_weight * lm_sc + cfg.word_score,
                            NEG_INF)
-    h_commit = _mix(_mix(state.hash[:, None], ctok_s * 2 + 1), wid_s)
+    h_commit = _mix(_mix(state.hash[:, :, None], ctok_s * 2 + 1), wid_s)
     new_words = _append(
-        jnp.broadcast_to(state.words[:, None], (K, C, MAX_WORDS)
-                         ).reshape(K * C, MAX_WORDS),
-        jnp.broadcast_to(state.n_words[:, None], (K, C)).reshape(-1),
-        wid_s.reshape(-1)).reshape(K, C, MAX_WORDS)
+        jnp.broadcast_to(state.words[:, :, None], (B, K, C, MAX_WORDS)
+                         ).reshape(B * K * C, MAX_WORDS),
+        jnp.broadcast_to(state.n_words[:, :, None], (B, K, C)).reshape(-1),
+        wid_s.reshape(-1)).reshape(B, K, C, MAX_WORDS)
 
     commit = hyp.Candidates(
         hash=flat(h_commit),
-        pb=jnp.full((K * C,), NEG_INF),
+        pb=jnp.full((B, K * C), NEG_INF),
         pnb=flat(commit_pnb),
         fields=dict(
             node=flat(jnp.where(is_word, lex.root, -1)),
-            lm_state=flat(lm.advance(
-                jnp.broadcast_to(state.lm_state[:, None], (K, C)), wid_s)),
+            lm_state=flat(lm.advance(lm_state_b, wid_s)),
             last_token=flat(ctok_s),
             tokens=flat(new_tokens),
-            n_tokens=flat(jnp.broadcast_to(n_tok_ext, (K, C))),
+            n_tokens=flat(jnp.broadcast_to(n_tok_ext, (B, K, C))),
             words=flat(new_words),
-            n_words=flat(jnp.broadcast_to(state.n_words[:, None] + 1, (K, C))),
+            n_words=flat(jnp.broadcast_to(state.n_words[:, :, None] + 1,
+                                          (B, K, C))),
         ),
     )
 
     cand = hyp.Candidates(
-        hash=jnp.concatenate([stay.hash, cont.hash, commit.hash]),
-        pb=jnp.concatenate([stay.pb, cont.pb, commit.pb]),
-        pnb=jnp.concatenate([stay.pnb, cont.pnb, commit.pnb]),
+        hash=jnp.concatenate([stay.hash, cont.hash, commit.hash], axis=1),
+        pb=jnp.concatenate([stay.pb, cont.pb, commit.pb], axis=1),
+        pnb=jnp.concatenate([stay.pnb, cont.pnb, commit.pnb], axis=1),
         fields={k: jnp.concatenate([stay.fields[k], cont.fields[k],
-                                    commit.fields[k]])
+                                    commit.fields[k]], axis=1)
                 for k in stay.fields},
     )
-    sel = hyp.hypothesis_unit_step(cand, K, cfg.beam_threshold,
-                                   use_pallas_prune)
+    sel = hyp.hypothesis_unit_step_batched(cand, K, cfg.beam_threshold,
+                                           kernels)
     return BeamState(
         hash=sel["hash"], pb=sel["pb"], pnb=sel["pnb"], node=sel["node"],
         lm_state=sel["lm_state"], last_token=sel["last_token"],
@@ -184,47 +206,48 @@ def expand_step(state: BeamState, log_probs: jax.Array, lex: Lexicon,
         n_words=sel["n_words"])
 
 
+def expand_step(state: BeamState, log_probs: jax.Array, lex: Lexicon,
+                lm: BigramLM, cfg: DecoderConfig,
+                kernels=None) -> BeamState:
+    """One hypothesis-expansion execution over one acoustic frame for a
+    single (K, ...) beam — the B=1 slice of the batched expansion, so
+    single-stream and slot-pool decoding share one code path exactly."""
+    out = expand_step_batched(
+        jax.tree.map(lambda a: a[None], state), log_probs[None],
+        lex, lm, cfg, kernels)
+    return jax.tree.map(lambda a: a[0], out)
+
+
 def decode(log_probs: jax.Array, lex: Lexicon, lm: BigramLM,
-           cfg: DecoderConfig) -> BeamState:
+           cfg: DecoderConfig, kernels=None) -> BeamState:
     """Offline decode: log_probs (T, V) -> final beam state."""
     st = init_state(cfg.beam_size, lm)
 
     def step(s, lp):
-        return expand_step(s, lp, lex, lm, cfg), None
+        return expand_step(s, lp, lex, lm, cfg, kernels), None
     st, _ = jax.lax.scan(step, st, log_probs)
     return st
 
 
 # ---------------------------------------------------------------------------
-# batched (multi-stream) decoding: every op above is per-stream pure, so a
-# leading stream axis is one vmap away.  BeamState leaves become (B, K, ...).
-# The slot helpers below are the beam-memory half of the serving engine's
-# slot pool (repro.serving.asr.AsrEngine owns them at runtime).
+# batched (multi-stream) decoding: `expand_step_batched` above is natively
+# slot-batched (shared lexicon/LM gathers, batch grid axis through the fused
+# hypothesis unit).  BeamState leaves are (B, K, ...).  The slot helpers
+# below are the beam-memory half of the serving engine's slot pool
+# (repro.serving.asr.AsrEngine owns them at runtime).
 # ---------------------------------------------------------------------------
 def init_batched_state(batch: int, k: int, lm: BigramLM) -> BeamState:
     """Beam state for `batch` independent streams: leaves are (B, K, ...)."""
     return treeutil.batch_tree(init_state(k, lm), batch)
 
 
-def expand_step_batched(state: BeamState, log_probs: jax.Array, lex: Lexicon,
-                        lm: BigramLM, cfg: DecoderConfig,
-                        use_pallas_prune: bool = False) -> BeamState:
-    """expand_step over a leading stream axis.
-
-    state: (B, K, ...) BeamState; log_probs: (B, V) — one acoustic frame
-    per stream.  The lexicon/LM are shared (closed over, not batched)."""
-    return jax.vmap(
-        lambda s, lp: expand_step(s, lp, lex, lm, cfg, use_pallas_prune)
-    )(state, log_probs)
-
-
 def decode_batched(log_probs: jax.Array, lex: Lexicon, lm: BigramLM,
-                   cfg: DecoderConfig) -> BeamState:
+                   cfg: DecoderConfig, kernels=None) -> BeamState:
     """Offline batched decode: log_probs (B, T, V) -> (B, K, ...) beams."""
     st = init_batched_state(log_probs.shape[0], cfg.beam_size, lm)
 
     def step(s, lp):
-        return expand_step_batched(s, lp, lex, lm, cfg), None
+        return expand_step_batched(s, lp, lex, lm, cfg, kernels), None
     st, _ = jax.lax.scan(step, st, jnp.swapaxes(log_probs, 0, 1))
     return st
 

@@ -68,8 +68,11 @@ def consumed_samples(n_frames: int, cfg: FeatureConfig) -> int:
 
 
 def mfcc(signal: jax.Array, cfg: FeatureConfig = FeatureConfig(),
-         use_pallas: bool = False) -> jax.Array:
-    """signal: (n_samples,) f32 -> (n_frames, n_mfcc) f32."""
+         use_pallas: bool = False, kernels=None) -> jax.Array:
+    """signal: (n_samples,) f32 -> (n_frames, n_mfcc) f32.
+
+    use_pallas routes the mel+log+DCT tail through the Pallas logmel
+    kernel, dispatched by the `kernels` KernelPolicy (None = auto)."""
     n = frames_producible(signal.shape[0], cfg)
     assert n > 0, "not enough samples for one frame"
     # pre-emphasis
@@ -85,7 +88,7 @@ def mfcc(signal: jax.Array, cfg: FeatureConfig = FeatureConfig(),
     dct = jnp.asarray(dct_matrix(cfg.n_mels, cfg.n_mfcc))
     if use_pallas:
         from repro.kernels import ops
-        return ops.logmel(power, fb, dct)
+        return ops.logmel(power, fb, dct, policy=kernels)
     logmel = jnp.log(jnp.maximum(power @ fb, 1e-10))
     return logmel @ dct
 

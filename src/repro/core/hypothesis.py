@@ -5,9 +5,16 @@ between decoding steps, (b) receives candidate hypotheses from expansion
 threads, (c) merges duplicates (same hash), and (d) sorts + prunes by
 score against the beam threshold.  Here a hypothesis set is a fixed-K
 struct-of-arrays (the 24 KB hypothesis memory maps to fixed K with -inf
-padding); merging is a sort-by-hash + segment-logsumexp; selection is a
-top_k + beam threshold.  The threshold prune itself also exists as a
-Pallas kernel (kernels/beam_prune.py).
+padding).
+
+The whole merge -> threshold -> top-k operation is ONE fused op
+(`kernels/ops.hypothesis_unit`): a batched argsort orders candidates by
+prefix hash, then a single Pallas kernel (or its pure-jnp ref twin,
+selected by `KernelPolicy`) does the segmented logsumexp merge, beam
+threshold, and top-k selection per stream slot.  This module keeps the
+candidate struct, the payload gathering around the fused op, and the
+legacy `merge_duplicates`/`select` stages (still property-tested as the
+semantic spec of the fused path).
 
 Scores are kept as two CTC channels (blank / non-blank); the merge
 logsumexps each channel independently, which is exactly CTC prefix-beam
@@ -21,6 +28,11 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+# dead candidates sort under an out-of-range uint32 sentinel: a VALID
+# candidate whose 31-bit hash happens to equal 2**31 - 1 used to collide
+# with the old int32 sentinel and be silently dropped
+_SENTINEL = jnp.uint32(0xFFFFFFFF)
 
 
 class Candidates(NamedTuple):
@@ -41,11 +53,12 @@ def merge_duplicates(c: Candidates) -> Candidates:
     After the merge, one representative per hash keeps the combined
     channels; the rest drop to -inf.  Payload fields of duplicates are
     identical by construction (same prefix), so the representative's
-    payload is exact.
+    payload is exact.  (Legacy stage: the decode hot path uses the fused
+    `kernels/ops.hypothesis_unit` instead.)
     """
     n = c.hash.shape[0]
     valid = total_score(c.pb, c.pnb) > NEG_INF / 2
-    key = jnp.where(valid, c.hash, jnp.int32(2**31 - 1))
+    key = jnp.where(valid, c.hash.astype(jnp.uint32), _SENTINEL)
     order = jnp.argsort(key)
     sk = key[order]
     seg_start = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
@@ -60,7 +73,7 @@ def merge_duplicates(c: Candidates) -> Candidates:
 
     pb_m = seg_lse(c.pb[order])[seg_id]
     pnb_m = seg_lse(c.pnb[order])[seg_id]
-    keep = seg_start & (sk != 2**31 - 1)
+    keep = seg_start & (sk != _SENTINEL)
     pb_new = jnp.where(keep, pb_m, NEG_INF)
     pnb_new = jnp.where(keep, pnb_m, NEG_INF)
     inv = jnp.argsort(order)
@@ -72,16 +85,11 @@ def select(c: Candidates, k: int, beam_threshold: float) -> dict:
     """Sort + prune: top-k by total score, then beam-threshold prune.
 
     Returns the new hypothesis set: dict of (k,)-arrays + 'valid' mask.
+    (Legacy stage — see `merge_duplicates`.)
     """
     tot = total_score(c.pb, c.pnb)
     if k > tot.shape[0]:      # pad candidate set up to the beam size
-        pad = k - tot.shape[0]
-        c = Candidates(
-            jnp.pad(c.hash, (0, pad)),
-            jnp.pad(c.pb, (0, pad), constant_values=NEG_INF),
-            jnp.pad(c.pnb, (0, pad), constant_values=NEG_INF),
-            {n: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
-             for n, a in c.fields.items()})
+        c = _pad_candidates(c, k - tot.shape[0])
         tot = total_score(c.pb, c.pnb)
     top, idx = jax.lax.top_k(tot, k)
     best = top[0]
@@ -96,16 +104,49 @@ def select(c: Candidates, k: int, beam_threshold: float) -> dict:
     return out
 
 
+def _pad_candidates(c: Candidates, pad: int) -> Candidates:
+    return Candidates(
+        jnp.pad(c.hash, [(0, 0)] * (c.hash.ndim - 1) + [(0, pad)]),
+        jnp.pad(c.pb, [(0, 0)] * (c.pb.ndim - 1) + [(0, pad)],
+                constant_values=NEG_INF),
+        jnp.pad(c.pnb, [(0, 0)] * (c.pnb.ndim - 1) + [(0, pad)],
+                constant_values=NEG_INF),
+        {n: jnp.pad(a, [(0, 0)] * (c.hash.ndim - 1) + [(0, pad)]
+                    + [(0, 0)] * (a.ndim - c.hash.ndim))
+         for n, a in c.fields.items()})
+
+
+def hypothesis_unit_step_batched(c: Candidates, k: int,
+                                 beam_threshold: float,
+                                 kernels=None) -> dict:
+    """Fused hypothesis-unit operation over a batch of candidate rows.
+
+    Candidate leaves carry a leading stream axis: hash/pb/pnb (B, N),
+    fields (B, N, ...).  Returns dict of (B, k, ...) arrays + 'valid'.
+    The merge/threshold/top-k itself is one `ops.hypothesis_unit` call
+    (Pallas kernel or pure-jnp ref, per `kernels` policy); payload
+    fields are gathered once with the returned representative indices.
+    """
+    from repro.kernels import ops
+
+    if k > c.hash.shape[-1]:   # pad candidate set up to the beam size
+        c = _pad_candidates(c, k - c.hash.shape[-1])
+    sel = ops.hypothesis_unit(c.hash, c.pb, c.pnb, k, beam_threshold,
+                              policy=kernels)
+    idx = sel["idx"]                                       # (B, k)
+    out = {"pb": sel["pb"], "pnb": sel["pnb"], "valid": sel["valid"],
+           "hash": jnp.take_along_axis(c.hash, idx, axis=1)}
+    for name, arr in c.fields.items():
+        ix = idx.reshape(idx.shape + (1,) * (arr.ndim - 2))
+        out[name] = jnp.take_along_axis(arr, ix, axis=1)
+    return out
+
+
 def hypothesis_unit_step(c: Candidates, k: int, beam_threshold: float,
-                         use_pallas_prune: bool = False) -> dict:
-    """Full hypothesis-unit operation: merge -> sort -> prune."""
-    merged = merge_duplicates(c)
-    if use_pallas_prune:
-        from repro.kernels import ops
-        tot = total_score(merged.pb, merged.pnb)
-        pruned = ops.beam_prune(tot, beam_threshold)
-        merged = Candidates(merged.hash,
-                            jnp.where(pruned > NEG_INF / 2, merged.pb, NEG_INF),
-                            jnp.where(pruned > NEG_INF / 2, merged.pnb, NEG_INF),
-                            merged.fields)
-    return select(merged, k, beam_threshold)
+                         kernels=None) -> dict:
+    """Full hypothesis-unit operation: merge -> threshold -> top-k,
+    fused (single-row convenience over the batched op)."""
+    batched = Candidates(c.hash[None], c.pb[None], c.pnb[None],
+                         {n: a[None] for n, a in c.fields.items()})
+    out = hypothesis_unit_step_batched(batched, k, beam_threshold, kernels)
+    return {name: a[0] for name, a in out.items()}

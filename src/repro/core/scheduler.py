@@ -22,6 +22,7 @@ core/stepplan.py and are re-exported here for compatibility.
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional
 
 import numpy as np
@@ -42,6 +43,12 @@ class ASRPU:
     _n_slots = 1
 
     def __init__(self, hw=ASRPU_HW):
+        warnings.warn(
+            f"{type(self).__name__} is deprecated: build a frozen "
+            "repro.serving.AsrProgram/EngineConfig and stream through "
+            "Session.push/poll/finish (see README.md 'Serving "
+            "architecture' for the migration table)",
+            DeprecationWarning, stacklevel=2)
         self.hw = hw
         self._tds_cfg: Optional[TDSConfig] = None
         self._params = None

@@ -2,8 +2,10 @@
 
 Two grid passes over the candidate score vector: pass 0 reduces the
 global max into SMEM scratch; pass 1 masks scores below (max - beam).
-This is the hardware sort/prune unit's threshold stage; top-k selection
-stays in XLA (lax.top_k).
+This standalone threshold stage predates the fused hypothesis unit
+(kernels/hypothesis_unit.py merges + thresholds + top-k selects in one
+pallas_call — the decode hot path uses that); it survives as the
+minimal two-pass reduction example and is still parity-tested.
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ from repro import compat
 MASK = -1e30
 
 
-def _kernel(s_ref, o_ref, best_ref, *, beam, nb):
+def _kernel(s_ref, o_ref, best_ref, *, beam):
     phase = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -49,7 +51,7 @@ def beam_prune_pallas(scores, beam, *, bn=1024, interpret=False):
     Np = N + pad
     beam = float(beam)  # static
     out = pl.pallas_call(
-        functools.partial(_kernel, beam=beam, nb=Np // bn),
+        functools.partial(_kernel, beam=beam),
         grid=(2, Np // bn),
         in_specs=[pl.BlockSpec((bn,), lambda p, i: (i,))],
         out_specs=pl.BlockSpec((bn,), lambda p, i: (i,)),

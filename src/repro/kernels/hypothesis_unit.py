@@ -1,0 +1,63 @@
+"""Fused hypothesis unit (paper §3.5) as ONE Pallas kernel.
+
+ASRPU's hypothesis unit is a single hardware block that merges duplicate
+hypotheses (same prefix hash), applies the beam threshold, and sort-
+selects the surviving top-K — previously reproduced as three separate
+stages (argsort merge in core/hypothesis.py, an optional two-pass Pallas
+threshold prune in kernels/beam_prune.py, and an XLA lax.top_k).  This
+kernel fuses merge + threshold + top-k into one pallas_call with a
+batch (stream-slot) grid axis, so the whole per-frame selection runs in
+one VMEM-resident pass per slot.
+
+Division of labour: the hash ORDERING itself (the hardware sort unit's
+first half) stays outside as one batched XLA argsort — sorting is the
+one primitive Mosaic has no native story for — and the kernel consumes
+the sorted row: segmented logsumexp merge (Hillis-Steele doubling, no
+O(N^2) equality matrix), threshold, and iterative top-k selection.
+
+The kernel body calls the same `ref.merge_select_sorted` row function
+the pure-jnp oracle vmaps, which is what makes interpret-mode parity on
+CPU bit-for-bit (tests/test_hypothesis_unit.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+
+def _kernel(key_ref, pb_ref, pnb_ref, pos_ref, opb_ref, opnb_ref, oval_ref,
+            *, k, beam):
+    pos, pb, pnb, valid = ref.merge_select_sorted(
+        key_ref[0], pb_ref[0], pnb_ref[0], k=k, beam=beam,
+        iterative_topk=True)   # no sort primitive inside Mosaic kernels
+    pos_ref[0] = pos
+    opb_ref[0] = pb
+    opnb_ref[0] = pnb
+    oval_ref[0] = valid
+
+
+@functools.partial(jax.jit, static_argnames=("k", "beam", "interpret"))
+def hypothesis_unit_pallas(key_s, pb_s, pnb_s, *, k, beam, interpret=False):
+    """key_s: (B, N) uint32 sorted keys; pb_s/pnb_s: (B, N) f32 sorted
+    channels.  One grid step per batch row (stream slot).  Returns
+    (pos, pb, pnb, valid) each (B, k); `pos` indexes the sorted row."""
+    B, N = key_s.shape
+    row = lambda b: (b, 0)
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k, beam=float(beam)),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, N), row)] * 3,
+        out_specs=(pl.BlockSpec((1, k), row), pl.BlockSpec((1, k), row),
+                   pl.BlockSpec((1, k), row), pl.BlockSpec((1, k), row)),
+        out_shape=(jax.ShapeDtypeStruct((B, k), jnp.int32),
+                   jax.ShapeDtypeStruct((B, k), jnp.float32),
+                   jax.ShapeDtypeStruct((B, k), jnp.float32),
+                   jax.ShapeDtypeStruct((B, k), jnp.int32)),
+        interpret=interpret,
+    )(key_s, pb_s, pnb_s)
+    return out

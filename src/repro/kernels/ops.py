@@ -1,8 +1,20 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas kernels, dispatched by KernelPolicy.
 
-On CPU (this container) kernels execute in interpret mode — the kernel
-body runs in Python per grid step, which is how correctness is validated
-against ref.py.  On TPU the same pallas_call compiles to Mosaic.
+Each wrapper takes an optional `policy: KernelPolicy` (threaded from
+`EngineConfig.kernels` by the serving engines) and resolves it to one of
+three modes (see kernels/policy.py):
+
+  ref        pure-jnp oracle from ref.py, XLA-compiled
+  interpret  the Pallas kernel under the interpreter (kernel body runs
+             in Python per grid step — how correctness is validated
+             against ref.py on CPU)
+  mosaic     the same pallas_call compiled to Mosaic on TPU
+
+`auto` resolves per backend, with the backend probe hoisted into the
+policy module (one `jax.default_backend()` read per process instead of
+one per call).  On CPU it keeps today's behavior for the standalone
+validation kernels (interpret) but routes the decode hot path — the
+fused `hypothesis_unit` — through `ref`.
 
 `int8_matmul(x, w)` takes float tensors and performs the full ASRPU int8
 path: blockless per-row/col symmetric quantization + int8 MXU matmul +
@@ -11,16 +23,17 @@ optimizer).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import (beam_prune as _bp, flash_attention as _fa,
-                           int8_matmul as _im, layernorm as _ln,
-                           logmel as _lm, tds_conv as _tc)
-
-
-def _interpret() -> bool:
-    return jax.default_backend() == "cpu"
+                           hypothesis_unit as _hu, int8_matmul as _im,
+                           layernorm as _ln, logmel as _lm, ref as _ref,
+                           tds_conv as _tc)
+from repro.kernels.policy import (DEFAULT_POLICY, KernelPolicy,  # noqa: F401
+                                  resolve)
 
 
 def quantize_rows(x):
@@ -32,11 +45,14 @@ def quantize_rows(x):
     return q, s
 
 
-def int8_matmul(x, w, *, bm=128, bn=128, bk=128):
+def int8_matmul(x, w, *, bm=128, bn=128, bk=128, policy=None):
     """x: (M, K) float; w: (K, N) float -> (M, N) f32 (int8 MXU path)."""
+    mode = resolve(policy)
     xq, xs = quantize_rows(x)
     wq_t, ws = quantize_rows(w.T)          # per-output-channel scales
     wq = wq_t.T
+    if mode == "ref":
+        return _ref.int8_matmul(xq, wq, xs, ws)
     M, K = xq.shape
     N = wq.shape[1]
     pad_m, pad_n, pad_k = (-M) % 8, (-N) % 128, (-K) % 128
@@ -50,35 +66,101 @@ def int8_matmul(x, w, *, bm=128, bn=128, bk=128):
     while xq.shape[0] % bm_:
         bm_ //= 2
     out = _im.int8_matmul_pallas(xq, wq, xs, ws, bm=bm_, bn=bn, bk=bk,
-                                 interpret=_interpret())
+                                 interpret=mode != "mosaic")
     return out[:M, :N]
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,
-                    block_q=128, block_kv=128):
+                    block_q=128, block_kv=128, policy=None):
+    mode = resolve(policy)
+    if mode == "ref":
+        return _ref.flash_attention(q, k, v, causal=causal, window=window)
     return _fa.flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       block_q=block_q, block_kv=block_kv,
-                                      interpret=_interpret())
+                                      interpret=mode != "mosaic")
 
 
-def layernorm(x, scale, bias, *, eps=1e-5):
+def layernorm(x, scale, bias, *, eps=1e-5, policy=None):
+    mode = resolve(policy)
+    if mode == "ref":
+        return _ref.layernorm(x, scale, bias, eps=eps)
     return _ln.norm_pallas(x, scale, bias, kind="layernorm", eps=eps,
-                           interpret=_interpret())
+                           interpret=mode != "mosaic")
 
 
-def rmsnorm(x, scale, *, eps=1e-6):
+def rmsnorm(x, scale, *, eps=1e-6, policy=None):
+    mode = resolve(policy)
+    if mode == "ref":
+        return _ref.rmsnorm(x, scale, eps=eps)
     return _ln.norm_pallas(x, scale, None, kind="rmsnorm", eps=eps,
-                           interpret=_interpret())
+                           interpret=mode != "mosaic")
 
 
-def logmel(power, fb, dct):
-    return _lm.logmel_pallas(power, fb, dct, interpret=_interpret())
+def logmel(power, fb, dct, policy=None):
+    mode = resolve(policy)
+    if mode == "ref":
+        return _ref.logmel(power, fb, dct)
+    return _lm.logmel_pallas(power, fb, dct, interpret=mode != "mosaic")
 
 
-def beam_prune(scores, beam):
-    return _bp.beam_prune_pallas(scores, beam, interpret=_interpret())
+def beam_prune(scores, beam, policy=None):
+    mode = resolve(policy)
+    if mode == "ref":
+        return _ref.beam_prune(scores, beam)
+    return _bp.beam_prune_pallas(scores, beam, interpret=mode != "mosaic")
 
 
-def tds_conv(x, w, b, *, stride=1):
+def tds_conv(x, w, b, *, stride=1, policy=None):
+    mode = resolve(policy)
+    if mode == "ref":
+        return _ref.tds_conv(x, w, b, stride=stride)
     return _tc.tds_conv_pallas(x, w, b, stride=stride,
-                               interpret=_interpret())
+                               interpret=mode != "mosaic")
+
+
+# ---------------------------------------------------------------------------
+# fused hypothesis unit (decode hot path)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("k", "beam", "mode"))
+def _hypothesis_unit(hashes, pb, pnb, *, k, beam, mode):
+    B, N = hashes.shape
+    assert N >= k, (N, k)
+    if mode == "ref":
+        return _ref.hypothesis_unit(hashes, pb, pnb, k=k, beam=beam)
+    valid = jnp.logaddexp(pb, pnb) > _ref.NEG_INF / 2
+    key = jnp.where(valid, hashes.astype(jnp.uint32), _ref.HASH_SENTINEL)
+    pad = (-N) % 128                       # lane-align the row for Mosaic
+    if pad:
+        key = jnp.pad(key, ((0, 0), (0, pad)),
+                      constant_values=_ref.HASH_SENTINEL)
+        pb = jnp.pad(pb, ((0, 0), (0, pad)), constant_values=_ref.NEG_INF)
+        pnb = jnp.pad(pnb, ((0, 0), (0, pad)), constant_values=_ref.NEG_INF)
+    # the hardware sort unit's ordering half: ONE batched XLA argsort;
+    # dead candidates carry an out-of-range uint32 sentinel, so a live
+    # hash equal to 2**31 - 1 can never be mistaken for one (the lane
+    # padding is merge-neutral: pads sort into the sentinel tail and
+    # contribute exact-zero mass, pinned bitwise by the parity tests
+    # against the unpadded ref pipeline)
+    order = jnp.argsort(key, axis=-1, stable=True)
+    key_s = jnp.take_along_axis(key, order, axis=-1)
+    pb_s = jnp.take_along_axis(pb, order, axis=-1)
+    pnb_s = jnp.take_along_axis(pnb, order, axis=-1)
+    pos, opb, opnb, oval = _hu.hypothesis_unit_pallas(
+        key_s, pb_s, pnb_s, k=k, beam=beam, interpret=mode != "mosaic")
+    idx = jnp.minimum(jnp.take_along_axis(order, pos, axis=-1), N - 1)
+    return {"idx": idx, "pb": opb, "pnb": opnb, "valid": oval.astype(bool)}
+
+
+def hypothesis_unit(hashes, pb, pnb, k, beam, policy=None):
+    """Fused hypothesis unit over a batch of candidate rows.
+
+    hashes: (B, N) int32 31-bit prefix hashes; pb/pnb: (B, N) f32 CTC
+    channels.  Merges duplicate hashes (channel-wise logsumexp), applies
+    the beam threshold, and selects the top-`k` per row.  Returns a dict
+    of (B, k) arrays: `idx` (index of each selected representative into
+    the original row — callers gather their payload fields with it),
+    merged `pb`/`pnb` (NEG_INF where pruned), and boolean `valid`.
+    """
+    mode = resolve(policy, hot=True)
+    return _hypothesis_unit(hashes, pb, pnb, k=k, beam=float(beam),
+                            mode=mode)

@@ -1,0 +1,60 @@
+"""Kernel dispatch policy: ref / interpret / Mosaic, resolved per backend.
+
+Every public wrapper in `kernels/ops.py` takes an optional `KernelPolicy`
+(threaded from `EngineConfig.kernels` by the serving engines) and picks
+one of three execution modes:
+
+  * ``ref``       — the pure-jnp oracle in `kernels/ref.py`, compiled by
+                    XLA.  The fast path on CPU for ops in the decode hot
+                    loop (interpret mode runs the kernel body in Python
+                    per grid step, which is debug-speed only).
+  * ``interpret`` — the Pallas kernel under the interpreter.  How kernel
+                    correctness is validated against ref.py on CPU.
+  * ``mosaic``    — the same pallas_call compiled by Mosaic (TPU).
+
+``auto`` (the default) resolves per backend: ``mosaic`` on an
+accelerator; on CPU, ``interpret`` for the standalone validation kernels
+but ``ref`` for hot-path ops (the fused hypothesis unit runs inside the
+per-frame decode scan).  The backend probe is hoisted out of the call
+path — `jax.default_backend()` is read once per process, not per call
+(it used to be re-queried by every op via `ops._interpret`).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+
+MODES = ("auto", "ref", "interpret", "mosaic")
+
+
+@functools.lru_cache(maxsize=1)
+def _default_backend() -> str:
+    return jax.default_backend()
+
+
+@dataclass(frozen=True)
+class KernelPolicy:
+    """Frozen kernel-dispatch spec carried by `EngineConfig`."""
+    mode: str = "auto"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+
+    def resolve(self, *, hot: bool = False) -> str:
+        """Concrete mode for one op.  `hot=True` marks ops on the decode
+        hot path, which `auto` never sends through the interpreter."""
+        if self.mode != "auto":
+            return self.mode
+        if _default_backend() == "cpu":
+            return "ref" if hot else "interpret"
+        return "mosaic"
+
+
+DEFAULT_POLICY = KernelPolicy()
+
+
+def resolve(policy: KernelPolicy | None, *, hot: bool = False) -> str:
+    return (policy if policy is not None else DEFAULT_POLICY).resolve(hot=hot)

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 MASK = -1e30
 
@@ -66,6 +67,107 @@ def beam_prune(scores, beam, mask_value=MASK):
     """scores: (N,) f32 -> scores with entries < max - beam set to MASK."""
     best = jnp.max(scores)
     return jnp.where(scores >= best - beam, scores, mask_value)
+
+
+# ---------------------------------------------------------------------------
+# fused hypothesis unit (paper §3.5): hash-merge + beam threshold + top-k
+# ---------------------------------------------------------------------------
+NEG_INF = -1e30                      # matches core/hypothesis.py
+HASH_SENTINEL = np.uint32(0xFFFFFFFF)    # > any 31-bit prefix hash
+
+
+def merge_select_sorted(key_s, pb_s, pnb_s, *, k: int, beam: float,
+                        iterative_topk: bool = False):
+    """One hypothesis-unit row over a candidate set PRE-SORTED by key.
+
+    key_s: (N,) uint32 — prefix hash for valid candidates, HASH_SENTINEL
+    for dead ones (so dead candidates sort to the tail and can never
+    merge with a live hash, even a live hash equal to 2**31 - 1).
+    pb_s / pnb_s: (N,) f32 CTC channels in the same sorted order.
+
+    Returns (pos, pb, pnb, valid), each (k,): `pos` indexes the SORTED
+    row (the caller maps it back through its argsort permutation),
+    pb/pnb are the merged channels of the selected representative, and
+    `valid` (int32 0/1) applies the beam threshold.
+
+    This function is the single source of truth for the merge/select
+    math: the pure-jnp ref path vmaps it per batch row and the Pallas
+    kernel (kernels/hypothesis_unit.py) calls it per grid step, which is
+    what makes interpret-mode parity bit-for-bit.  `iterative_topk`
+    picks the Mosaic-friendly k-pass argmax selection (the kernel path;
+    no sort primitive on TPU) over one `lax.top_k` — both have the same
+    semantics exactly (descending, ties to the lowest index; the score
+    domain is bounded below by NEG_INF, never -inf, and k <= N, so the
+    argmax loop can never re-pick an exhausted slot).
+    """
+    n = key_s.shape[0]
+    head = jnp.concatenate(
+        [jnp.ones((1,), bool), key_s[1:] != key_s[:-1]])     # segment starts
+    tail = jnp.concatenate([head[1:], jnp.ones((1,), bool)])  # segment ends
+    live = key_s != HASH_SENTINEL
+
+    def seg_lse(v):
+        """Backward segmented inclusive logsumexp scan (Hillis-Steele):
+        out[j] = logsumexp(v[j : end of j's segment])."""
+        val, done = v, tail
+        d = 1
+        while d < n:
+            nxt_val = jnp.concatenate(
+                [val[d:], jnp.full((d,), NEG_INF, val.dtype)])
+            nxt_done = jnp.concatenate([done[d:], jnp.zeros((d,), bool)])
+            val = jnp.where(done, val, jnp.logaddexp(val, nxt_val))
+            done = done | nxt_done
+            d *= 2
+        return val
+
+    pb_m = seg_lse(pb_s)
+    pnb_m = seg_lse(pnb_s)
+    # an all-dead channel stays exactly NEG_INF (streaming logaddexp of
+    # -1e30 terms drifts by +log(count) ulps otherwise)
+    pb_m = jnp.where(pb_m > NEG_INF / 2, pb_m, NEG_INF)
+    pnb_m = jnp.where(pnb_m > NEG_INF / 2, pnb_m, NEG_INF)
+
+    rep = head & live                       # one representative per live hash
+    tot = jnp.where(rep, jnp.logaddexp(pb_m, pnb_m), NEG_INF)
+    best = jnp.max(tot)
+
+    if iterative_topk:
+        def pick(i, carry):
+            t, pos = carry
+            j = jnp.argmax(t).astype(jnp.int32)   # ties -> lowest index
+            return t.at[j].set(-jnp.inf), pos.at[i].set(j)
+
+        _, pos = jax.lax.fori_loop(
+            0, k, pick, (tot, jnp.zeros((k,), jnp.int32)))
+        top = tot[pos]
+    else:
+        top, pos = jax.lax.top_k(tot, k)
+        pos = pos.astype(jnp.int32)
+    valid = (top > NEG_INF / 2) & (top >= best - beam)
+    pb = jnp.where(valid, pb_m[pos], NEG_INF)
+    pnb = jnp.where(valid, pnb_m[pos], NEG_INF)
+    return pos, pb, pnb, valid.astype(jnp.int32)
+
+
+def hypothesis_unit(hashes, pb, pnb, *, k: int, beam: float):
+    """Batched fused hypothesis unit, pure jnp (the kernel's oracle).
+
+    hashes: (B, N) int32 31-bit prefix hashes; pb/pnb: (B, N) f32.
+    Returns dict of (B, k) arrays: `idx` (selected candidate index into
+    the ORIGINAL row), merged `pb`/`pnb`, and boolean `valid`.
+    """
+    n = hashes.shape[-1]
+    valid_in = jnp.logaddexp(pb, pnb) > NEG_INF / 2
+    key = jnp.where(valid_in, hashes.astype(jnp.uint32), HASH_SENTINEL)
+    order = jnp.argsort(key, axis=-1, stable=True)
+    key_s = jnp.take_along_axis(key, order, axis=-1)
+    pb_s = jnp.take_along_axis(pb, order, axis=-1)
+    pnb_s = jnp.take_along_axis(pnb, order, axis=-1)
+    row = jax.vmap(
+        lambda ks, ps, qs: merge_select_sorted(ks, ps, qs, k=k, beam=beam))
+    pos, opb, opnb, oval = row(key_s, pb_s, pnb_s)
+    idx = jnp.minimum(jnp.take_along_axis(order, pos, axis=-1), n - 1)
+    return {"idx": idx, "pb": opb, "pnb": opnb, "valid": oval.astype(bool)}
 
 
 def tds_conv(x, w, b, stride=1):

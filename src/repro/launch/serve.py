@@ -29,9 +29,14 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.kernels.policy import KernelPolicy
 from repro.launch.steps import build_lm
 from repro.serving import (AsrEngine, AsrProgram, EngineConfig, LmEngine,
                            LmProgram)
+
+
+def _policy(args) -> KernelPolicy:
+    return KernelPolicy(args.kernels)
 
 
 def serve_lm(args):
@@ -39,12 +44,15 @@ def serve_lm(args):
     lm = build_lm(cfg, None)
     params = lm.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(1, cfg.vocab_size, args.prompt_len)
-               for _ in range(args.requests)]
+    # vary prompt lengths so bucketed admission is exercised (one
+    # masked multi-row prefill jit entry per bucket, not per length)
+    plens = [max(1, args.prompt_len - (i % 4)) for i in range(args.requests)]
+    prompts = [rng.integers(1, cfg.vocab_size, n) for n in plens]
 
     program = LmProgram(cfg, cache_len=args.prompt_len + args.max_new,
                         max_new=args.max_new)
-    engine = LmEngine(EngineConfig(program, n_slots=args.slots), params)
+    engine = LmEngine(EngineConfig(program, n_slots=args.slots,
+                                   kernels=_policy(args)), params)
 
     t0 = time.time()
     outputs = engine.serve(prompts)
@@ -52,7 +60,9 @@ def serve_lm(args):
     total_tokens = sum(len(v) for v in outputs)
     print(f"served {len(outputs)} requests, {total_tokens} tokens, "
           f"{engine.n_steps} decode steps in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s)")
+          f"({total_tokens/dt:.1f} tok/s); "
+          f"{engine.prefill_cache_entries()} prefill jit entries over "
+          f"buckets {program.buckets()}")
     return dict(enumerate(outputs))
 
 
@@ -76,12 +86,14 @@ def asr_demo_system():
     return tds_cfg, words, lex, lm, params, DECODER_CONFIG
 
 
-def asr_demo_engine(n_slots: int) -> tuple:
+def asr_demo_engine(n_slots: int, kernels: KernelPolicy = None) -> tuple:
     """(engine, words): an AsrEngine over the demo system's program."""
     tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
     program = AsrProgram(tds_cfg, lex, lm, dec_cfg=dec_cfg,
                         ).with_beam_width(25.0)
-    engine = AsrEngine(EngineConfig(program, n_slots=n_slots), params)
+    engine = AsrEngine(EngineConfig(program, n_slots=n_slots,
+                                    kernels=kernels or KernelPolicy()),
+                       params)
     return engine, words
 
 
@@ -90,7 +102,7 @@ def serve_asr(args):
     80 ms chunks; poll() tracks the live best hypothesis."""
     from repro.data.pipeline import SyntheticASR
 
-    engine, words = asr_demo_engine(1)
+    engine, words = asr_demo_engine(1, _policy(args))
     data = SyntheticASR(words)
     spp = engine.plan.samples_per_step
     n_utts = 2 if args.utterances is None else args.utterances
@@ -118,7 +130,7 @@ def serve_asr_multistream(args):
     (continuous batching, mirroring serve_lm's slot pool)."""
     from repro.data.pipeline import SyntheticASR
 
-    engine, words = asr_demo_engine(args.streams)
+    engine, words = asr_demo_engine(args.streams, _policy(args))
     data = SyntheticASR(words)
     # default: one utterance per slot; an explicit --utterances wins
     # (fewer than --streams just leaves the extra slots masked idle)
@@ -152,8 +164,13 @@ def main(argv=None):
                     help="ASR utterance count (default: 2, or one per "
                          "slot when --streams > 1)")
     ap.add_argument("--streams", type=int, default=1,
-                    help="ASR slot-pool size; >1 uses the vmapped "
+                    help="ASR slot-pool size; >1 uses the batched "
                          "multi-stream scheduler")
+    ap.add_argument("--kernels", default="auto",
+                    choices=["auto", "ref", "interpret", "mosaic"],
+                    help="KernelPolicy mode for Pallas-backed decode ops "
+                         "(auto: Mosaic on TPU, ref for the hot path on "
+                         "CPU)")
     args = ap.parse_args(argv)
     if args.mode == "lm":
         return serve_lm(args)

@@ -40,11 +40,15 @@ def init_mamba(key, d_model: int, spec: SSMSpec, dtype=jnp.bfloat16) -> dict:
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
-                 state: jax.Array | None = None):
+                 state: jax.Array | None = None,
+                 lengths: jax.Array | None = None):
     """Depthwise causal conv over time. x: (B,S,C), w: (ck,C).
 
     Returns (y, new_state) with new_state = last ck-1 inputs.
     Implemented as ck shifted adds (ck is 4) — cheap and fusion-friendly.
+    With `lengths` (B,), row b's trailing x[b, lengths[b]:] is right-
+    padding: new_state becomes the last ck-1 inputs BEFORE the padding
+    (causality already keeps pad inputs out of the real outputs).
     """
     ck = w.shape[0]
     B, S, C = x.shape
@@ -53,7 +57,15 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
     xp = jnp.concatenate([state, x], axis=1)                 # (B, S+ck-1, C)
     y = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(ck))
     y = jax.nn.silu(y + b[None, None, :])
-    new_state = xp[:, S:, :] if S >= ck - 1 else xp[:, -(ck - 1):, :]
+    if lengths is not None:
+        # xp row j holds input position j - (ck-1); the state after
+        # position len-1 is xp rows len .. len+ck-2
+        rows = lengths[:, None] + jnp.arange(ck - 1)[None, :]    # (B, ck-1)
+        new_state = jnp.take_along_axis(xp, rows[:, :, None], axis=1)
+    elif S >= ck - 1:
+        new_state = xp[:, S:, :]
+    else:
+        new_state = xp[:, -(ck - 1):, :]
     return y, new_state
 
 
@@ -125,10 +137,15 @@ def init_cache(batch: int, d_model: int, spec: SSMSpec, dtype=jnp.bfloat16):
 
 
 def apply_mamba(p: dict, x: jax.Array, spec: SSMSpec, cache=None,
-                sharder=None):
+                sharder=None, lengths=None):
     """x: (B,S,D). cache: optional {'conv','ssm'} for decode/streaming.
 
     Returns (y, new_cache). S==1 with cache uses the exact step recurrence.
+    `lengths` (B,) marks x[b, lengths[b]:] as right-padding (bucketed
+    prefill): dt is zeroed there — the SSD recurrence then carries the
+    state through pad positions untouched (decay exp(0)=1, update 0) —
+    and the conv state is taken before the padding, so the returned
+    cache equals an unpadded prefill's bit-for-bit in structure.
     Mamba is natural TP over d_inner: the depthwise conv and per-head SSD
     never mix heads until out_proj, so activations are constrained
     head-sharded over 'model' (one all-reduce per layer, at out_proj).
@@ -146,9 +163,13 @@ def apply_mamba(p: dict, x: jax.Array, spec: SSMSpec, cache=None,
     xi = sharder.inner(layers.linear(p["w_x"], x))
     dt = jax.nn.softplus(layers.linear(p["w_dt"], x).astype(jnp.float32)
                          + p["dt_bias"])                      # (B,S,nh)
+    if lengths is not None:
+        pad = jnp.arange(S)[None, :] >= lengths[:, None]      # (B, S)
+        dt = jnp.where(pad[:, :, None], 0.0, dt)
 
     conv_state = cache["conv"] if cache is not None else None
-    xi, new_conv = _causal_conv(xi, p["conv_x"]["w"], p["conv_x"]["b"], conv_state)
+    xi, new_conv = _causal_conv(xi, p["conv_x"]["w"], p["conv_x"]["b"],
+                                conv_state, lengths=lengths)
     xi = sharder.inner(xi)
     Bm = layers.linear(p["w_B"], x).reshape(B, S, G, N)
     Cm = layers.linear(p["w_C"], x).reshape(B, S, G, N)

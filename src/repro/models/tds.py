@@ -179,12 +179,14 @@ def _conv_step(p, spec: KernelSpec, state, x):
 
 
 def forward(params, cfg: TDSConfig, feats: jax.Array,
-            state: Optional[dict] = None, use_int8: bool = False):
+            state: Optional[dict] = None, use_int8: bool = False,
+            kernels=None):
     """feats: (T, n_mfcc). Returns (log_probs (T', V), new_state).
 
     state=None => offline (zero left context).  T must be divisible by the
     total subsample.  use_int8 routes FC/head matmuls through the int8
-    quantized path (core/quant) — ASRPU's 8-bit MAC.
+    quantized path (core/quant) — ASRPU's 8-bit MAC; `kernels` is the
+    KernelPolicy dispatching that Pallas-backed op (None = auto).
     """
     specs = build_kernel_specs(cfg)
     st_in = state if state is not None else init_stream_state(cfg)
@@ -195,7 +197,7 @@ def forward(params, cfg: TDSConfig, feats: jax.Array,
     def matmul(xm, pw, pb):
         if use_int8:
             from repro.kernels import ops
-            return ops.int8_matmul(xm, pw) + pb
+            return ops.int8_matmul(xm, pw, policy=kernels) + pb
         return xm @ pw + pb
 
     for spec in specs:

@@ -233,7 +233,8 @@ class LM:
         out = layers.linear(p_mix["wo"], out.reshape(B, 1, Hq))
         return out, {"k": k, "v": v}
 
-    def _sublayer(self, p, lp, x, positions, cache_p, kpos, slot, decode):
+    def _sublayer(self, p, lp, x, positions, cache_p, kpos, slot, decode,
+                  lengths=None):
         cfg = self.cfg
         aux = jnp.zeros((), jnp.float32)
         h = layers.apply_norm(lp["norm1"], x, cfg.norm)
@@ -242,11 +243,14 @@ class LM:
                 out, new_cache = self._attn_decode(lp["mixer"], h, positions,
                                                    cache_p, kpos, slot)
             else:
+                # causal: right-padding (bucketed prefill) cannot leak
+                # into real positions, so no mask is needed here
                 out, kv = self._attn_full(lp["mixer"], h, positions)
                 new_cache = {"k": kv[0], "v": kv[1]}
         else:
             out, new_cache = mamba.apply_mamba(lp["mixer"], h, cfg.ssm,
-                                               cache_p, sharder=self.sh)
+                                               cache_p, sharder=self.sh,
+                                               lengths=lengths)
         x = x + out
         if self._has_mlp(p):
             h = layers.apply_norm(lp["norm2"], x, cfg.norm)
@@ -259,7 +263,7 @@ class LM:
         return self.sh.act(x), new_cache, aux
 
     def _scan_layers(self, params, x, positions, cache=None, *, decode=False,
-                     remat=False, collect_cache=False):
+                     remat=False, collect_cache=False, lengths=None):
         kpos = cache["kpos"] if cache is not None else None
         # per-slot serving cache: offset (B,), kpos (B, Sc) — each batch
         # row keeps its own write slot / positions (see init_cache)
@@ -328,7 +332,8 @@ class LM:
             new_c = {}
             for p in range(self.P):
                 h, nc, aux = self._sublayer(p, lp[f"p{p}"], h, positions,
-                                            cr[f"p{p}"], kpos, slot, decode)
+                                            cr[f"p{p}"], kpos, slot, decode,
+                                            lengths=lengths)
                 new_c[f"p{p}"] = nc
             ys = new_c if collect_cache else None
             return (h, aux_sum + aux), ys
@@ -393,27 +398,66 @@ class LM:
         return loss + zloss + MOE_AUX_COEF * aux, {
             "loss": loss, "aux": aux, "ntok": ntok}
 
-    def prefill(self, params, batch):
-        """Full-seq forward. Returns (last-token logits (B,Vp), cache)."""
+    def prefill(self, params, batch, lengths=None, cache_len=None):
+        """Full-seq forward. Returns (last-token logits (B,Vp), cache).
+
+        `lengths` (B,) enables the masked (bucketed) path: each row's
+        tokens beyond lengths[b] are right-padding — logits come from
+        position lengths[b]-1, recurrent state stops before the padding
+        (see mamba.apply_mamba), and the cache is assembled with
+        PER-ROW position metadata (kpos (B, Sc), offset (B,)) so rows
+        drop straight into a per-slot serving pool.  `cache_len`
+        overrides the assembled ring width (the pool's ring may be
+        narrower than the padded bucket)."""
         cfg = self.cfg
         x = self._embed(params, batch)
         B, S = x.shape[:2]
         positions = self._positions(batch, B, S)
         x, _, cache = self._scan_layers(params, x, positions,
-                                        collect_cache=True)
-        x = layers.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
-        logits = self._logits(params, x)[:, 0]
-        # assemble decode cache (kpos/offset); SWA ring handled by decode path
-        Sc = self.cache_len(S)
-        if cache is not None and Sc != S:
-            def trim(a):
-                return a[:, :, -Sc:] if a.ndim >= 3 and a.shape[2] == S else a
-            cache["layers"] = jax.tree.map(trim, cache["layers"])
-            cache["kpos"] = jnp.arange(S - Sc, S, dtype=jnp.int32) % jnp.int32(Sc)
-            cache["kpos"] = jnp.arange(S - Sc, S, dtype=jnp.int32)
-        else:
-            cache["kpos"] = jnp.arange(S, dtype=jnp.int32)
-        cache["offset"] = jnp.full((), S, jnp.int32)
+                                        collect_cache=True, lengths=lengths)
+        if lengths is None:
+            x = layers.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+            logits = self._logits(params, x)[:, 0]
+            # assemble decode cache (kpos/offset); SWA ring by decode path
+            Sc = self.cache_len(S)
+            if cache is not None and Sc != S:
+                def trim(a):
+                    return (a[:, :, -Sc:]
+                            if a.ndim >= 3 and a.shape[2] == S else a)
+                cache["layers"] = jax.tree.map(trim, cache["layers"])
+                cache["kpos"] = jnp.arange(S - Sc, S, dtype=jnp.int32)
+            else:
+                cache["kpos"] = jnp.arange(S, dtype=jnp.int32)
+            cache["offset"] = jnp.full((), S, jnp.int32)
+            return logits, cache
+
+        # ---- masked path: per-row last token + per-row ring assembly ----
+        last = jnp.clip(lengths - 1, 0, S - 1)                    # (B,)
+        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)  # (B,1,D)
+        xl = layers.apply_norm(params["final_norm"], xl, cfg.norm)
+        logits = self._logits(params, xl)[:, 0]
+        Sc = self.cache_len(S) if cache_len is None else int(cache_len)
+        # cache row j of stream b holds position start_b + j, where
+        # start_b = max(len_b - Sc, 0): the last min(len, Sc) real
+        # positions land in rows 0.. (prompts longer than the ring
+        # arrive trimmed, mirroring the SWA decode convention)
+        start = jnp.maximum(lengths - Sc, 0)                      # (B,)
+        pos_rows = start[:, None] + jnp.arange(Sc)[None, :]       # (B, Sc)
+        rows = jnp.minimum(pos_rows, S - 1)
+        new_layers = {}
+        for p in range(self.P):
+            lay = cache["layers"][f"p{p}"]
+            if self._kind(p) == "attn":
+                ix = rows[None, :, :, None, None]     # (1,B,Sc,1,1) -> bcast
+                new_layers[f"p{p}"] = {
+                    name: jnp.take_along_axis(lay[name], ix, axis=2)
+                    for name in ("k", "v")}
+            else:
+                new_layers[f"p{p}"] = lay    # SSM/conv states: no seq axis
+        cache["layers"] = new_layers
+        cache["kpos"] = jnp.where(pos_rows < lengths[:, None],
+                                  pos_rows, -1).astype(jnp.int32)
+        cache["offset"] = lengths.astype(jnp.int32)
         return logits, cache
 
     def decode_step(self, params, cache, batch):

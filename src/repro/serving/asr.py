@@ -1,14 +1,17 @@
-"""Streaming ASR engine: B utterance slots, ONE vmapped decoding step.
+"""Streaming ASR engine: B utterance slots, ONE slot-native decoding step.
 
 The fused decoding step (paper §3.1: acoustic scoring — MFCC + the TDS
 kernel sequence — then one hypothesis expansion per emitted acoustic
-frame) is pure in all carried state, so the engine vmaps it over a
-leading slot axis: every pytree leaf of the TDS left-context state and
-of the `BeamState` carries a leading slot axis, each slot keeps its own
-sample buffer, and one jitted step advances every slot that has a full
-window buffered.  Slots without a window are masked out — their carried
-state passes through unchanged — so each slot's trajectory is exactly
-the single-stream decoder's.
+frame) is pure in all carried state.  Acoustic scoring is vmapped over
+a leading slot axis; hypothesis expansion is natively slot-batched
+(`decoder.expand_step_batched`): the shared lexicon trie / bigram table
+are gathered once over the flattened slot index set and the fused
+Pallas hypothesis unit runs with a batch grid axis.  Every pytree leaf
+of the TDS left-context state and of the `BeamState` carries a leading
+slot axis, each slot keeps its own sample buffer, and one jitted step
+advances every slot that has a full window buffered.  Slots without a
+window are masked out — their carried state passes through unchanged —
+so each slot's trajectory is exactly the single-stream decoder's.
 
 Window bookkeeping is the setup-thread arithmetic from core/features:
 `frames_producible` decides whether a slot can step (enough buffered
@@ -68,31 +71,34 @@ class AsrEngine(Engine):
         self._reset_pool()
 
     # ---- the fused decoding-step program -----------------------------
-    def _fused_step_fn(self):
-        """Single-slot fused step: acoustic scoring + one hypothesis
-        expansion per emitted acoustic frame.  Pure in carried state."""
+    def _masked_step_fn(self):
+        """One slot-native decoding step: acoustic scoring (MFCC + the
+        TDS kernel sequence) is vmapped over the slot axis, then each
+        emitted acoustic frame runs ONE natively batched hypothesis
+        expansion — shared lexicon/LM gathers over the flattened slot
+        index set and the fused hypothesis unit with a batch grid axis
+        (the old path vmapped the whole per-stream step, re-gathering
+        the shared tables slot by slot).  Masked slots carry their
+        state through unchanged."""
         prog = self.program
         nfr = self.plan.feat_frames_per_step
+        kernels = self.config.kernels
 
-        def step(params, stream_state, beam_state, samples):
+        def acoustic(params, stream_state, samples):
             feats = features.mfcc(samples, prog.feat_cfg)[:nfr]
-            logp, new_state = tds.forward(params, prog.tds_cfg, feats,
-                                          stream_state,
-                                          use_int8=prog.use_int8)
+            return tds.forward(params, prog.tds_cfg, feats, stream_state,
+                               use_int8=prog.use_int8, kernels=kernels)
 
-            def expand(bs, lp):
-                return dec.expand_step(bs, lp, prog.lex, prog.lm,
-                                       prog.dec_cfg), None
-            beam_state, _ = jax.lax.scan(expand, beam_state, logp)
-            return new_state, beam_state
-
-        return step
-
-    def _masked_step_fn(self):
-        vstep = jax.vmap(self._fused_step_fn(), in_axes=(None, 0, 0, 0))
+        vacoustic = jax.vmap(acoustic, in_axes=(None, 0, 0))
 
         def step(params, stream_state, beam_state, samples, active):
-            new_ss, new_bs = vstep(params, stream_state, beam_state, samples)
+            logp, new_ss = vacoustic(params, stream_state, samples)
+
+            def expand(bs, lp):            # lp: (B, V) — one frame, all slots
+                return dec.expand_step_batched(bs, lp, prog.lex, prog.lm,
+                                               prog.dec_cfg, kernels), None
+            new_bs, _ = jax.lax.scan(expand, beam_state,
+                                     jnp.swapaxes(logp, 0, 1))
 
             def keep(new, old):
                 m = active.reshape((-1,) + (1,) * (new.ndim - 1))

@@ -11,14 +11,15 @@ mutates its program — reconfiguration means building a new engine.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Union
+from dataclasses import dataclass, field, replace
+from typing import Tuple, Union
 
 from repro.configs.base import ModelConfig
 from repro.configs.tds_asr import (DECODER_CONFIG, FEATURE_CONFIG,
                                    DecoderConfig, FeatureConfig, TDSConfig)
 from repro.core.lexicon import BigramLM, Lexicon
 from repro.core.stepplan import StepPlan, make_step_plan
+from repro.kernels.policy import KernelPolicy
 
 
 @dataclass(frozen=True)
@@ -46,10 +47,47 @@ class AsrProgram:
 
 @dataclass(frozen=True)
 class LmProgram:
-    """Batched LM serving program: arch + pooled-cache geometry."""
+    """Batched LM serving program: arch + pooled-cache geometry.
+
+    `prefill_buckets` bounds admission-time compilation: prompts are
+    right-padded to the smallest covering bucket and prefilled through
+    one jit entry per bucket (a masked multi-row prefill), instead of
+    one jit entry per distinct prompt length.  Empty = derive powers of
+    two from 8 up to the first one covering the longest legal prompt.
+    """
     model_cfg: ModelConfig
     cache_len: int
     max_new: int
+    prefill_buckets: Tuple[int, ...] = ()
+
+    @property
+    def max_prompt_len(self) -> int:
+        return self.cache_len - self.max_new
+
+    def buckets(self) -> Tuple[int, ...]:
+        if self.prefill_buckets:
+            bs = tuple(sorted(set(int(b) for b in self.prefill_buckets)))
+            if bs[-1] < self.max_prompt_len:
+                raise ValueError(
+                    f"largest prefill bucket {bs[-1]} does not cover the "
+                    f"longest legal prompt ({self.max_prompt_len})")
+        else:
+            out, b = [8], 8
+            while b < self.max_prompt_len:
+                b *= 2
+                out.append(b)
+            bs = tuple(out)
+        # prefill chunking (attention chunks, SSD chunk size) requires
+        # every bucket S to satisfy S % min(chunk, S) == 0
+        chunks = [self.model_cfg.attn_chunk_q, self.model_cfg.attn_chunk_kv]
+        if self.model_cfg.ssm is not None:
+            chunks.append(self.model_cfg.ssm.chunk_size)
+        for b in bs:
+            for c in chunks:
+                if b % min(c, b):
+                    raise ValueError(
+                        f"prefill bucket {b} not divisible by chunk {c}")
+        return bs
 
     def validate_prompt(self, prompt_len: int) -> None:
         if prompt_len < 1:
@@ -65,9 +103,15 @@ Program = Union[AsrProgram, LmProgram]
 
 @dataclass(frozen=True)
 class EngineConfig:
-    """A program plus the slot-pool size it is served over."""
+    """A program plus the slot-pool size it is served over.
+
+    `kernels` selects how Pallas-backed decode ops execute (ref /
+    interpret / Mosaic, resolved per backend by default) — it replaced
+    the old per-call `use_pallas_prune` bool threaded through the
+    decoder; see repro.kernels.policy.KernelPolicy."""
     program: Program
     n_slots: int = 1
+    kernels: KernelPolicy = field(default_factory=KernelPolicy)
 
     def __post_init__(self):
         if self.n_slots < 1:

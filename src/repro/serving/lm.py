@@ -1,13 +1,21 @@
 """Batched LM serving engine: a fixed (batch, cache) slot pool.
 
-Admission prefills one request into its slot of the pooled decode cache;
-every engine step is one fused `decode_step` over all slots (idle slots
-decode garbage that is simply never read).  Cache position metadata is
-PER SLOT — `kpos` is (B, Sc) and `offset` is (B,) — so staggered
-admissions with unequal prompt lengths keep correct rotary positions and
-cache-write slots per stream (the global-metadata version clobbered
-every stream's offset on each admit; regression-tested in
-tests/test_serving.py).
+Admission prefills requests into their slots of the pooled decode cache
+through BUCKETED prefill: prompts are right-padded to the smallest
+covering length bucket (`LmProgram.buckets()`) and run through ONE
+masked multi-row prefill per bucket — the model reads each row's logits
+at its true last token, stops recurrent state before the padding, and
+returns per-row cache metadata (see `LM.prefill(lengths=...)`).  The
+prefill batch is always padded to `n_slots` rows, so staggered
+admissions with arbitrary prompt lengths compile at most one jit entry
+per bucket (the old path compiled one entry per distinct prompt length
+and prefilled one request at a time).  Every engine step is one fused
+`decode_step` over all slots (idle slots decode garbage that is simply
+never read).  Cache position metadata is PER SLOT — `kpos` is (B, Sc)
+and `offset` is (B,) — so staggered admissions with unequal prompt
+lengths keep correct rotary positions and cache-write slots per stream
+(the global-metadata version clobbered every stream's offset on each
+admit; regression-tested in tests/test_serving.py).
 
 Session protocol: `push(prompt)` submits the request (prefill happens at
 admission); `poll()` drives the engine — admitted requests generate
@@ -36,17 +44,28 @@ class LmEngine(Engine):
         self.program: LmProgram = config.program
         self.lm = LM(self.program.model_cfg)
         self.params = params
+        self._buckets = self.program.buckets()
+        # sliding-window archs clamp the allocated ring to attn_window;
+        # all admission-time position metadata must use the real width
+        ring = self.lm.cache_len(self.program.cache_len)
         self._jit_decode = jax.jit(self.lm.decode_step)
-        self._jit_prefill = jax.jit(self.lm.prefill)
+        self._jit_prefill = jax.jit(
+            lambda p, tokens, lengths: self.lm.prefill(
+                p, {"tokens": tokens}, lengths=lengths, cache_len=ring))
         self._reset_pool()
+        assert self._ring == ring, (self._ring, ring)
+
+    def prefill_cache_entries(self) -> Optional[int]:
+        """Number of compiled prefill variants (None if the jit cache
+        does not expose its size) — bounded by len(program.buckets())."""
+        size = getattr(self._jit_prefill, "_cache_size", None)
+        return size() if callable(size) else None
 
     # ---- slot-pool state ---------------------------------------------
     def _reset_pool(self) -> None:
         B = self.n_slots
         self.cache = self.lm.init_cache(B, self.program.cache_len,
                                         per_slot=True)
-        # sliding-window archs clamp the allocated ring to attn_window;
-        # all admission-time position metadata must use the real width
         self._ring = int(self.cache["kpos"].shape[1])
         self._tokens = jnp.zeros((B, 1), jnp.int32)
         self._gen: List[Optional[list]] = [None] * B
@@ -77,36 +96,75 @@ class LmEngine(Engine):
     def _empty_result(self) -> dict:
         return {"tokens": [], "done": True}
 
-    def _admit_to_slot(self, session: Session, slot: int) -> None:
-        prompt = session._pending
-        assert prompt is not None, f"session {session.sid} pushed no prompt"
-        plen = int(prompt.shape[0])
-        logits, pc = self._jit_prefill(
-            self.params, {"tokens": jnp.asarray(prompt)[None]})
+    # ---- bucketed admission ------------------------------------------
+    def _bucket(self, plen: int) -> int:
+        for b in self._buckets:
+            if plen <= b:
+                return b
+        return self._buckets[-1]   # unreachable: validate_prompt caps plen
 
-        # write the prompt KV / SSM state into the pooled cache slot
+    def _admit(self) -> bool:
+        """Admit every admissible queued session into the free slots,
+        grouped by prompt-length bucket: one masked multi-row prefill
+        per bucket (batch padded to n_slots so the jit cache stays at
+        one entry per bucket)."""
+        free = [s for s in range(self.n_slots) if self._owner[s] is None]
+        ready = [s for s in self._queue if self._admittable(s)][:len(free)]
+        if not ready:
+            return False
+        groups: dict = {}
+        for sess, slot in zip(ready, free):
+            self._queue.remove(sess)
+            self._owner[slot] = sess
+            sess.slot = slot
+            b = self._bucket(int(sess._pending.shape[0]))
+            groups.setdefault(b, []).append((sess, slot))
+        for b, group in sorted(groups.items()):
+            self._prefill_group(b, group)
+        for sess in ready:
+            sess._pending = None
+        return True
+
+    def _admit_to_slot(self, session: Session, slot: int) -> None:
+        # kept for the Engine slot-mechanics contract; the overridden
+        # `_admit` batches admissions, so this is the 1-session case
+        self._prefill_group(self._bucket(int(session._pending.shape[0])),
+                            [(session, slot)])
+
+    def _prefill_group(self, bucket: int, group) -> None:
+        B = self.n_slots           # pad the batch: jit entries ∝ buckets only
+        toks = np.zeros((B, bucket), np.int32)
+        lens = np.ones((B,), np.int32)
+        for i, (sess, _) in enumerate(group):
+            prompt = sess._pending
+            assert prompt is not None, f"session {sess.sid} pushed no prompt"
+            toks[i, :prompt.shape[0]] = prompt
+            lens[i] = prompt.shape[0]
+        logits, pc = self._jit_prefill(self.params, jnp.asarray(toks),
+                                       jnp.asarray(lens))
+        # scatter the whole group at once: rows 0..G-1 of the prefill
+        # cache land in the group's pool slots with ONE batched
+        # advanced-index write per cache leaf (rows are ring-aligned
+        # already), and one host sync reads every first token
+        G = len(group)
+        slots = jnp.asarray([slot for _, slot in group])
+
         def put(dst, src):
-            src = src.astype(dst.dtype)
-            if dst.ndim >= 3 and src.shape[2] != dst.shape[2]:
-                return dst.at[:, slot:slot + 1, :src.shape[2]].set(src)
-            return dst.at[:, slot:slot + 1].set(src)
+            return dst.at[:, slots].set(src[:, :G].astype(dst.dtype))
+
         self.cache["layers"] = jax.tree.map(put, self.cache["layers"],
                                             pc["layers"])
-        # per-slot position metadata: only THIS slot's row is touched.
-        # A prompt longer than the SWA ring arrives trimmed from prefill
-        # (last `ring` positions at indices 0..ring-1) — mirror that.
-        Sc = self._ring
-        eff = min(plen, Sc)
-        row = jnp.full((Sc,), -1, jnp.int32).at[:eff].set(
-            jnp.arange(plen - eff, plen, dtype=jnp.int32))
-        self.cache["kpos"] = self.cache["kpos"].at[slot].set(row)
-        self.cache["offset"] = self.cache["offset"].at[slot].set(plen)
-
+        self.cache["kpos"] = self.cache["kpos"].at[slots].set(
+            pc["kpos"][:G])
+        self.cache["offset"] = self.cache["offset"].at[slots].set(
+            pc["offset"][:G])
         vocab = self.program.model_cfg.vocab_size
-        first = int(jnp.argmax(logits[0, :vocab]))
-        self._tokens = self._tokens.at[slot, 0].set(first)
-        self._gen[slot] = [first]
-        self._rem[slot] = self.program.max_new - 1
+        firsts = np.asarray(jnp.argmax(logits[:G, :vocab], axis=-1),
+                            np.int32)
+        self._tokens = self._tokens.at[slots, 0].set(jnp.asarray(firsts))
+        for i, (sess, slot) in enumerate(group):
+            self._gen[slot] = [int(firsts[i])]
+            self._rem[slot] = self.program.max_new - 1
 
     def _step(self) -> bool:
         live = [s for s in range(self.n_slots)

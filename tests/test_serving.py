@@ -6,6 +6,7 @@ lengths)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.configs.tds_asr import (DecoderConfig, FeatureConfig, TDSConfig,
@@ -321,6 +322,89 @@ def test_lm_swa_ring_cache_admission():
         ref = LmEngine(EngineConfig(program, n_slots=1),
                        params).serve([prompt])[0]
         assert tokens == ref
+
+
+def test_lm_bucketed_prefill_bounds_jit_entries():
+    """Staggered admissions with MANY distinct prompt lengths compile at
+    most len(program.buckets()) prefill jit entries (pad-to-bucket +
+    batch padded to n_slots), and every token stream still equals its
+    dedicated single-slot decode."""
+    cfg = get_config("chatglm3-6b").tiny()
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    program = LmProgram(cfg, cache_len=24, max_new=6)
+    assert program.buckets() == (8, 16, 32)
+    rng = np.random.default_rng(3)
+    lengths = (3, 5, 7, 9, 12, 17, 18)      # 7 distinct lengths, 3 buckets
+    prompts = [rng.integers(1, cfg.vocab_size, n) for n in lengths]
+
+    engine = LmEngine(EngineConfig(program, n_slots=2), params)
+    got = engine.serve(prompts)
+    for prompt, tokens in zip(prompts, got):
+        ref = LmEngine(EngineConfig(program, n_slots=1),
+                       params).serve([prompt])[0]
+        assert tokens == ref
+        assert len(tokens) == program.max_new
+
+    entries = engine.prefill_cache_entries()
+    if entries is None:      # private jax jit-cache introspection gone
+        pytest.skip("this jax version does not expose the jit cache size")
+    assert entries <= len(program.buckets()), entries
+
+
+@pytest.mark.parametrize("arch", ["chatglm3-6b", "mamba2-1.3b",
+                                  "h2o-danube-1.8b"])
+def test_masked_prefill_matches_unmasked(arch):
+    """LM.prefill(lengths=...) on a right-padded bucket returns the
+    same last-token logits and per-position cache state as the unpadded
+    prefill (attention exactly; SSM to float error of the chunked
+    scan), plus per-row kpos/offset ready for the serving pool."""
+    cfg = get_config(arch).tiny()
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    plen, bucket, ring = 9, 16, lm.cache_len(24)
+    toks = rng.integers(1, cfg.vocab_size, (1, plen)).astype(np.int32)
+    l_ref, c_ref = lm.prefill(params, {"tokens": jnp.asarray(toks)})
+    padded = np.zeros((1, bucket), np.int32)
+    padded[0, :plen] = toks[0]
+    l_got, c_got = lm.prefill(params, {"tokens": jnp.asarray(padded)},
+                              lengths=jnp.asarray([plen], jnp.int32),
+                              cache_len=ring)
+    np.testing.assert_allclose(
+        np.asarray(l_got[0, :cfg.vocab_size], np.float32),
+        np.asarray(l_ref[0, :cfg.vocab_size], np.float32),
+        rtol=1e-5, atol=1e-5)
+
+    def cmp(a, b):
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        if a.ndim >= 3 and a.shape[2] != b.shape[2]:    # attn cache rows
+            n = min(plen, a.shape[2], b.shape[2])
+            a, b = a[:, :, :n], b[:, :, :n]
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    jax.tree.map(cmp, c_got["layers"], c_ref["layers"])
+    kpos = np.asarray(c_got["kpos"])
+    assert kpos.shape == (1, ring)
+    assert kpos[0, :plen].tolist() == list(range(plen))
+    assert (kpos[0, plen:] == -1).all()
+    assert np.asarray(c_got["offset"]).tolist() == [plen]
+
+
+def test_deprecated_shims_warn_and_still_work():
+    """ASRPU / MultiStreamASRPU emit DeprecationWarning at construction
+    and keep decoding through the batched-expansion engine."""
+    from repro.core.scheduler import ASRPU, MultiStreamASRPU
+
+    words, lex, lm, dcfg, params = _asr_system()
+    audio = SyntheticASR(words).utterance(0)["audio"]
+    with pytest.warns(DeprecationWarning, match="ASRPU is deprecated"):
+        pu = ASRPU()
+    pu.configure_acoustic_scoring(TINY_TDS, params, FEAT16)
+    pu.configure_hyp_expansion(lex, lm, dcfg)
+    best = pu.decoding_step(audio)
+    assert np.isfinite(best["score"])
+    with pytest.warns(DeprecationWarning, match="MultiStreamASRPU"):
+        MultiStreamASRPU(2)
 
 
 def test_lm_per_slot_cache_matches_scalar_cache():
