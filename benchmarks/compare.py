@@ -1,0 +1,60 @@
+"""Diff a fresh benchmark JSON against a committed baseline.
+
+Non-gating perf-regression annotator for the CI bench-smoke job:
+
+  python -m benchmarks.compare BENCH_decode.json bench_fresh.json \\
+      --threshold 1.3
+
+prints one line per row present in BOTH files and emits a GitHub
+`::warning::` annotation for every row whose fresh time exceeds
+threshold x baseline.  `*_pre_refactor` trajectory keys and rows missing
+from either side are skipped.  Always exits 0 — bench hosts are noisy
+shared runners, so regressions annotate the run instead of failing it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def compare(base: dict, fresh: dict, threshold: float) -> list:
+    regressed = []
+    for name in sorted(set(base) & set(fresh)):
+        if name.endswith("_pre_refactor"):
+            continue
+        b, f = float(base[name]), float(fresh[name])
+        if b <= 0.0:            # derived-only rows carry 0 us
+            continue
+        ratio = f / b
+        flag = " REGRESSED" if ratio > threshold else ""
+        print(f"{name}: {b:.2f} -> {f:.2f} us ({ratio:.2f}x){flag}")
+        if flag:
+            regressed.append((name, b, f, ratio))
+    return regressed
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("base", help="committed baseline JSON (BENCH_decode.json)")
+    ap.add_argument("fresh", help="freshly measured JSON")
+    ap.add_argument("--threshold", type=float, default=1.3,
+                    help="annotate rows slower than threshold x baseline")
+    args = ap.parse_args(argv)
+
+    base = json.loads(pathlib.Path(args.base).read_text())
+    fresh = json.loads(pathlib.Path(args.fresh).read_text())
+    regressed = compare(base, fresh, args.threshold)
+    if regressed:
+        for name, b, f, ratio in regressed:
+            print(f"::warning file={args.base}::{name} regressed "
+                  f"{ratio:.2f}x ({b:.0f} -> {f:.0f} us, "
+                  f"threshold {args.threshold}x)")
+        print(f"{len(regressed)} row(s) regressed (non-gating)")
+    else:
+        print("no rows regressed beyond "
+              f"{args.threshold}x ({len(set(base) & set(fresh))} compared)")
+
+
+if __name__ == "__main__":
+    main()

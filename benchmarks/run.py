@@ -157,6 +157,29 @@ def multistream_throughput():
         f"speedup={dt_seq/dt_bat:.2f}x")
 
 
+def acoustic_steps():
+    """The acoustic half of the decoding step — fused-logmel MFCC tail +
+    the slot-native TDS forward — jitted, at B=1 and B=4 slots (the
+    (B, T) rows fold into one matmul row dimension per kernel)."""
+    params = tds.init_tds(jax.random.PRNGKey(0), TDS_CONFIG)
+    fc = FEATURE_CONFIG
+    nfr = 8
+    need = fc.frame_len + (nfr - 1) * fc.frame_shift
+
+    @jax.jit
+    def step(p, ss, x):
+        feats = features.mfcc(x, fc, use_pallas=True, hot=True)[:, :nfr]
+        return tds.forward_batched(p, TDS_CONFIG, feats, ss)
+
+    R = np.random.RandomState(0)
+    for b in (1, 4):
+        ss = tds.init_batched_stream_state(TDS_CONFIG, b)
+        x = jnp.asarray(R.randn(b, need).astype(np.float32))
+        us, _ = _timeit(step, params, ss, x, n=5, warmup=2)
+        row(f"acoustic_step_b{b}", us,
+            f"fused_mfcc+tds_forward;{us/b:.0f}us_per_slot")
+
+
 def beam_throughput():
     words = {f"w{i}": [1 + (i * 7 + j) % 30 for j in range(3)]
              for i in range(20)}
@@ -230,6 +253,14 @@ def kernel_benches():
     us, _ = _timeit(lambda: ops.tds_conv(xc, wc, bc), n=3, warmup=1)
     row("kernel_tds_conv_64", us, "stage1_conv")
 
+    # the full 79-kernel TDS sequence, one 80 ms window (the acoustic
+    # model inside every decoding step)
+    tparams = tds.init_tds(jax.random.PRNGKey(0), TDS_CONFIG)
+    feats8 = jnp.asarray(R.randn(8, 80).astype(np.float32))
+    fwd = jax.jit(lambda p, f: tds.forward(p, TDS_CONFIG, f)[0])
+    us, _ = _timeit(fwd, tparams, feats8, n=3, warmup=1)
+    row("kernel_tds_forward", us, "79_kernel_sequence_T8")
+
 
 def dryrun_summary():
     art = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
@@ -257,7 +288,8 @@ def dryrun_summary():
 
 GROUPS = {
     "paper": (fig9_layer_sizes, fig11_kernel_times, sec54_realtime),
-    "decode": (beam_throughput, multistream_throughput, rtf_measured),
+    "decode": (beam_throughput, acoustic_steps, multistream_throughput,
+               rtf_measured),
     "kernels": (kernel_benches,),
     "dryrun": (dryrun_summary,),
 }

@@ -76,6 +76,15 @@ def _append(arr, n, val):
     return jnp.where(onehot, val[:, None], arr)
 
 
+def _append_if(arr, n, val):
+    """Batched conditional append: arr (B, K, L); n/val (B, K); append
+    `val` at position n where val >= 0, else pass the row through."""
+    L = arr.shape[-1]
+    onehot = (jnp.arange(L)[None, None, :]
+              == jnp.minimum(n, L - 1)[:, :, None]) & (val >= 0)[:, :, None]
+    return jnp.where(onehot, val[:, :, None], arr)
+
+
 def expand_step_batched(state: BeamState, log_probs: jax.Array, lex: Lexicon,
                         lm: BigramLM, cfg: DecoderConfig,
                         kernels=None) -> BeamState:
@@ -87,7 +96,13 @@ def expand_step_batched(state: BeamState, log_probs: jax.Array, lex: Lexicon,
     scores) runs once over the flattened (B*K,) / (B*K*C,) index set
     instead of per slot (the old path vmapped the whole per-stream step,
     re-gathering the shared tables slot by slot).  The merge/threshold/
-    top-k lands in the fused hypothesis unit with a batch grid axis."""
+    top-k lands in the fused hypothesis unit with a batch grid axis.
+
+    Candidates carry only SCALAR payload fields; the token/word history
+    rows of the K winners are reconstructed from (parent, appended
+    token/word) after selection.  Materializing per-candidate histories
+    — (B, K(2C+1), MAX_TOKENS) broadcasts — moved tens of MB per frame
+    and dominated the expansion's wall clock."""
     B, K = state.hash.shape
     C = lex.max_children
     lp = log_probs.astype(jnp.float32)                   # (B, V)
@@ -99,14 +114,17 @@ def expand_step_batched(state: BeamState, log_probs: jax.Array, lex: Lexicon,
         state.last_token >= 0,
         jnp.take_along_axis(lp, jnp.maximum(state.last_token, 0), axis=1),
         NEG_INF)                                         # (B, K)
+    parent0 = jnp.broadcast_to(jnp.arange(K, dtype=jnp.int32)[None],
+                               (B, K))
     stay = hyp.Candidates(
         hash=state.hash,
         pb=jnp.where(alive, tot + lp[:, cfg.blank_id][:, None], NEG_INF),
         pnb=jnp.where(alive, state.pnb + lp_last, NEG_INF),
         fields=dict(node=state.node, lm_state=state.lm_state,
-                    last_token=state.last_token, tokens=state.tokens,
-                    n_tokens=state.n_tokens, words=state.words,
-                    n_words=state.n_words),
+                    last_token=state.last_token, n_tokens=state.n_tokens,
+                    n_words=state.n_words, parent=parent0,
+                    app_tok=jnp.full((B, K), -1, jnp.int32),
+                    app_word=jnp.full((B, K), -1, jnp.int32)),
     )
 
     # ---- extension candidates (continue / commit), K x C per slot ------
@@ -127,13 +145,9 @@ def expand_step_batched(state: BeamState, log_probs: jax.Array, lex: Lexicon,
     pnb_ext = jnp.where(alive[:, :, None], base + lp_ext, NEG_INF)
 
     h_ext = _mix(state.hash[:, :, None], ctok_s * 2)     # continue-hash
-    new_tokens = _append(
-        jnp.broadcast_to(state.tokens[:, :, None], (B, K, C, MAX_TOKENS)
-                         ).reshape(B * K * C, MAX_TOKENS),
-        jnp.broadcast_to(state.n_tokens[:, :, None], (B, K, C)).reshape(-1),
-        ctok_s.reshape(-1)).reshape(B, K, C, MAX_TOKENS)
     n_tok_ext = state.n_tokens[:, :, None] + 1
     lm_state_b = jnp.broadcast_to(state.lm_state[:, :, None], (B, K, C))
+    parent_b = jnp.broadcast_to(parent0[:, :, None], (B, K, C))
 
     def flat(x):
         return x.reshape((B, K * C) + x.shape[3:])
@@ -146,12 +160,12 @@ def expand_step_batched(state: BeamState, log_probs: jax.Array, lex: Lexicon,
             node=flat(child),
             lm_state=flat(lm_state_b),
             last_token=flat(ctok_s),
-            tokens=flat(new_tokens),
             n_tokens=flat(jnp.broadcast_to(n_tok_ext, (B, K, C))),
-            words=flat(jnp.broadcast_to(state.words[:, :, None],
-                                        (B, K, C, MAX_WORDS))),
             n_words=flat(jnp.broadcast_to(state.n_words[:, :, None],
                                           (B, K, C))),
+            parent=flat(parent_b),
+            app_tok=flat(ctok_s),
+            app_word=flat(jnp.full((B, K, C), -1, jnp.int32)),
         ),
     )
 
@@ -167,11 +181,6 @@ def expand_step_batched(state: BeamState, log_probs: jax.Array, lex: Lexicon,
                            pnb_ext + cfg.lm_weight * lm_sc + cfg.word_score,
                            NEG_INF)
     h_commit = _mix(_mix(state.hash[:, :, None], ctok_s * 2 + 1), wid_s)
-    new_words = _append(
-        jnp.broadcast_to(state.words[:, :, None], (B, K, C, MAX_WORDS)
-                         ).reshape(B * K * C, MAX_WORDS),
-        jnp.broadcast_to(state.n_words[:, :, None], (B, K, C)).reshape(-1),
-        wid_s.reshape(-1)).reshape(B, K, C, MAX_WORDS)
 
     commit = hyp.Candidates(
         hash=flat(h_commit),
@@ -181,11 +190,12 @@ def expand_step_batched(state: BeamState, log_probs: jax.Array, lex: Lexicon,
             node=flat(jnp.where(is_word, lex.root, -1)),
             lm_state=flat(lm.advance(lm_state_b, wid_s)),
             last_token=flat(ctok_s),
-            tokens=flat(new_tokens),
             n_tokens=flat(jnp.broadcast_to(n_tok_ext, (B, K, C))),
-            words=flat(new_words),
             n_words=flat(jnp.broadcast_to(state.n_words[:, :, None] + 1,
                                           (B, K, C))),
+            parent=flat(parent_b),
+            app_tok=flat(ctok_s),
+            app_word=flat(jnp.where(is_word, wid_s, -1)),
         ),
     )
 
@@ -199,10 +209,24 @@ def expand_step_batched(state: BeamState, log_probs: jax.Array, lex: Lexicon,
     )
     sel = hyp.hypothesis_unit_step_batched(cand, K, cfg.beam_threshold,
                                            kernels)
+    # reconstruct the K winners' token/word histories: gather the parent
+    # rows and conditionally append the one new token/word
+    parent = sel["parent"]                               # (B, K)
+    par_tokens = jnp.take_along_axis(state.tokens, parent[:, :, None],
+                                     axis=1)
+    par_words = jnp.take_along_axis(state.words, parent[:, :, None], axis=1)
+    appending = sel["app_tok"] >= 0
+    tokens = _append_if(par_tokens,
+                        sel["n_tokens"] - appending.astype(jnp.int32),
+                        sel["app_tok"])
+    words = _append_if(par_words,
+                       sel["n_words"] - (sel["app_word"] >= 0
+                                         ).astype(jnp.int32),
+                       sel["app_word"])
     return BeamState(
         hash=sel["hash"], pb=sel["pb"], pnb=sel["pnb"], node=sel["node"],
         lm_state=sel["lm_state"], last_token=sel["last_token"],
-        tokens=sel["tokens"], n_tokens=sel["n_tokens"], words=sel["words"],
+        tokens=tokens, n_tokens=sel["n_tokens"], words=words,
         n_words=sel["n_words"])
 
 

@@ -68,27 +68,36 @@ def consumed_samples(n_frames: int, cfg: FeatureConfig) -> int:
 
 
 def mfcc(signal: jax.Array, cfg: FeatureConfig = FeatureConfig(),
-         use_pallas: bool = False, kernels=None) -> jax.Array:
-    """signal: (n_samples,) f32 -> (n_frames, n_mfcc) f32.
+         use_pallas: bool = False, kernels=None,
+         hot: bool = False) -> jax.Array:
+    """signal: (..., n_samples) f32 -> (..., n_frames, n_mfcc) f32.
 
-    use_pallas routes the mel+log+DCT tail through the Pallas logmel
-    kernel, dispatched by the `kernels` KernelPolicy (None = auto)."""
-    n = frames_producible(signal.shape[0], cfg)
+    Leading axes are batch (the serving engine extracts every slot's
+    window in one call — B slots fold into the logmel matmul's row
+    dimension).  use_pallas routes the mel+log+DCT tail through the
+    fused logmel kernel, dispatched by the `kernels` KernelPolicy
+    (None = auto; `hot` marks the call as decode-hot-path so auto never
+    picks the interpreter)."""
+    n = frames_producible(signal.shape[-1], cfg)
     assert n > 0, "not enough samples for one frame"
     # pre-emphasis
-    sig = jnp.concatenate([signal[:1], signal[1:] - cfg.preemphasis * signal[:-1]])
+    sig = jnp.concatenate(
+        [signal[..., :1], signal[..., 1:] - cfg.preemphasis * signal[..., :-1]],
+        axis=-1)
     idx = (jnp.arange(n)[:, None] * cfg.frame_shift
            + jnp.arange(cfg.frame_len)[None, :])
-    frames = sig[idx]                                        # (n, frame_len)
+    frames = jnp.take(sig, idx, axis=-1)             # (..., n, frame_len)
     win = jnp.asarray(np.hamming(cfg.frame_len).astype(np.float32))
-    frames = frames * win[None, :]
+    frames = frames * win
     spec = jnp.fft.rfft(frames, n=cfg.n_fft, axis=-1)
-    power = jnp.square(jnp.abs(spec)).astype(jnp.float32)    # (n, n_bins)
+    power = jnp.square(jnp.abs(spec)).astype(jnp.float32)    # (..., n, n_bins)
     fb = jnp.asarray(mel_filterbank(cfg))
     dct = jnp.asarray(dct_matrix(cfg.n_mels, cfg.n_mfcc))
     if use_pallas:
         from repro.kernels import ops
-        return ops.logmel(power, fb, dct, policy=kernels)
+        rows = power.reshape(-1, power.shape[-1])
+        out = ops.logmel(rows, fb, dct, policy=kernels, hot=hot)
+        return out.reshape(power.shape[:-1] + (out.shape[-1],))
     logmel = jnp.log(jnp.maximum(power @ fb, 1e-10))
     return logmel @ dct
 

@@ -31,10 +31,17 @@ def _kernel(x_ref, s_ref, b_ref, o_ref, *, eps, kind):
 @functools.partial(jax.jit, static_argnames=("kind", "eps", "bt", "interpret"))
 def norm_pallas(x, scale, bias=None, *, kind="layernorm", eps=1e-5, bt=256,
                 interpret=False):
-    """x: (T, D); scale/bias: (D,). kind: layernorm | rmsnorm."""
+    """x: (T, D); scale/bias: (D,). kind: layernorm | rmsnorm.
+
+    Rows are independent, so T is padded up to a multiple of the row
+    tile (zero rows normalize to finite values under the eps guard) and
+    the pad is sliced off — any row count runs, not just multiples of
+    `bt`."""
     T, D = x.shape
     bt = min(bt, T)
-    assert T % bt == 0, (T, bt)
+    pad = (-T) % bt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
     args = [x, scale] + ([bias] if bias is not None else [])
     in_specs = [pl.BlockSpec((bt, D), lambda i: (i, 0)),
                 pl.BlockSpec((D,), lambda i: (0,))]
@@ -44,11 +51,13 @@ def norm_pallas(x, scale, bias=None, *, kind="layernorm", eps=1e-5, bt=256,
     else:
         def kernel(x_ref, s_ref, o_ref):
             _kernel(x_ref, s_ref, None, o_ref, eps=eps, kind=kind)
-    return pl.pallas_call(
+    Tp = T + pad
+    out = pl.pallas_call(
         kernel,
-        grid=(T // bt,),
+        grid=(Tp // bt,),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bt, D), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((T, D), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((Tp, D), x.dtype),
         interpret=interpret,
     )(*args)
+    return out[:T]

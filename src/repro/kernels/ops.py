@@ -45,12 +45,26 @@ def quantize_rows(x):
     return q, s
 
 
-def int8_matmul(x, w, *, bm=128, bn=128, bk=128, policy=None):
-    """x: (M, K) float; w: (K, N) float -> (M, N) f32 (int8 MXU path)."""
-    mode = resolve(policy)
+def prepare_int8_weights(w):
+    """Quantize a static weight matrix ONCE: w (K, N) float ->
+    (wq (K, N) i8, ws (N,) f32 per-output-channel scales).
+
+    The serving engines call this at build time (`tds.quantize_params`)
+    so the decode hot path only quantizes activations — re-quantizing a
+    static weight every `int8_matmul` call is pure waste."""
+    wq_t, ws = quantize_rows(w.T)
+    return wq_t.T, ws
+
+
+def int8_matmul_prepared(x, wq, ws, *, bm=128, bn=128, bk=128, policy=None,
+                         hot=False):
+    """x: (M, K) float; wq/ws from `prepare_int8_weights` -> (M, N) f32.
+
+    The hot-path half of the int8 pipeline: per-row activation
+    quantization + int8 MXU matmul + fp32 rescale, with the weight-side
+    quantization already done."""
+    mode = resolve(policy, hot=hot)
     xq, xs = quantize_rows(x)
-    wq_t, ws = quantize_rows(w.T)          # per-output-channel scales
-    wq = wq_t.T
     if mode == "ref":
         return _ref.int8_matmul(xq, wq, xs, ws)
     M, K = xq.shape
@@ -70,6 +84,17 @@ def int8_matmul(x, w, *, bm=128, bn=128, bk=128, policy=None):
     return out[:M, :N]
 
 
+def int8_matmul(x, w, *, bm=128, bn=128, bk=128, policy=None, hot=False):
+    """x: (M, K) float; w: (K, N) float -> (M, N) f32 (int8 MXU path).
+
+    Quantizes BOTH operands on every call — correct for one-shot use,
+    but callers with static weights should `prepare_int8_weights` once
+    and use `int8_matmul_prepared` on the hot path."""
+    wq, ws = prepare_int8_weights(w)
+    return int8_matmul_prepared(x, wq, ws, bm=bm, bn=bn, bk=bk,
+                                policy=policy, hot=hot)
+
+
 def flash_attention(q, k, v, *, causal=True, window=None,
                     block_q=128, block_kv=128, policy=None):
     mode = resolve(policy)
@@ -80,24 +105,24 @@ def flash_attention(q, k, v, *, causal=True, window=None,
                                       interpret=mode != "mosaic")
 
 
-def layernorm(x, scale, bias, *, eps=1e-5, policy=None):
-    mode = resolve(policy)
+def layernorm(x, scale, bias, *, eps=1e-5, policy=None, hot=False):
+    mode = resolve(policy, hot=hot)
     if mode == "ref":
         return _ref.layernorm(x, scale, bias, eps=eps)
     return _ln.norm_pallas(x, scale, bias, kind="layernorm", eps=eps,
                            interpret=mode != "mosaic")
 
 
-def rmsnorm(x, scale, *, eps=1e-6, policy=None):
-    mode = resolve(policy)
+def rmsnorm(x, scale, *, eps=1e-6, policy=None, hot=False):
+    mode = resolve(policy, hot=hot)
     if mode == "ref":
         return _ref.rmsnorm(x, scale, eps=eps)
     return _ln.norm_pallas(x, scale, None, kind="rmsnorm", eps=eps,
                            interpret=mode != "mosaic")
 
 
-def logmel(power, fb, dct, policy=None):
-    mode = resolve(policy)
+def logmel(power, fb, dct, policy=None, *, hot=False):
+    mode = resolve(policy, hot=hot)
     if mode == "ref":
         return _ref.logmel(power, fb, dct)
     return _lm.logmel_pallas(power, fb, dct, interpret=mode != "mosaic")
@@ -110,12 +135,22 @@ def beam_prune(scores, beam, policy=None):
     return _bp.beam_prune_pallas(scores, beam, interpret=mode != "mosaic")
 
 
-def tds_conv(x, w, b, *, stride=1, policy=None):
-    mode = resolve(policy)
+def tds_conv(x, w, b, *, stride=1, relu=False, res=None, policy=None,
+             hot=False):
+    """Causal strided TDS conv with the fused bias+ReLU+residual
+    epilogue.  x: (B, k-1+T, W, Cin) slot-batched (3-D = B=1)."""
+    mode = resolve(policy, hot=hot)
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+        res = None if res is None else res[None]
     if mode == "ref":
-        return _ref.tds_conv(x, w, b, stride=stride)
-    return _tc.tds_conv_pallas(x, w, b, stride=stride,
-                               interpret=mode != "mosaic")
+        out = _ref.tds_conv_fused(x, w, b, stride=stride, relu=relu,
+                                  res=res)
+    else:
+        out = _tc.tds_conv_pallas(x, w, b, res, stride=stride, relu=relu,
+                                  interpret=mode != "mosaic")
+    return out[0] if squeeze else out
 
 
 # ---------------------------------------------------------------------------
@@ -147,8 +182,12 @@ def _hypothesis_unit(hashes, pb, pnb, *, k, beam, mode):
     pnb_s = jnp.take_along_axis(pnb, order, axis=-1)
     pos, opb, opnb, oval = _hu.hypothesis_unit_pallas(
         key_s, pb_s, pnb_s, k=k, beam=beam, interpret=mode != "mosaic")
-    idx = jnp.minimum(jnp.take_along_axis(order, pos, axis=-1), N - 1)
-    return {"idx": idx, "pb": opb, "pnb": opnb, "valid": oval.astype(bool)}
+    valid = oval.astype(bool)
+    # order[pos] is the sorted segment head = the selected hash's FIRST
+    # occurrence in the original row (stable sort), matching the
+    # sort-free ref path; pruned slots pin to 0 in both paths
+    idx = jnp.where(valid, jnp.take_along_axis(order, pos, axis=-1), 0)
+    return {"idx": idx, "pb": opb, "pnb": opnb, "valid": valid}
 
 
 def hypothesis_unit(hashes, pb, pnb, k, beam, policy=None):

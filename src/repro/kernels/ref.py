@@ -76,6 +76,27 @@ NEG_INF = -1e30                      # matches core/hypothesis.py
 HASH_SENTINEL = np.uint32(0xFFFFFFFF)    # > any 31-bit prefix hash
 
 
+def _seg_lse(v, ids, num_segments, *, indices_are_sorted=False):
+    """Per-segment logsumexp of flat `v`, broadcast back per position:
+    out[j] = logsumexp(v over j's whole segment).
+
+    max + exp + segment-sum (scatter) instead of a log2(n)-pass
+    logaddexp scan — the scan's transcendentals dominated the
+    decode-hot-path merge.  Both hypothesis-unit paths (sorted-row
+    kernel, sort-free ref) call this one helper, accumulating segment
+    terms in original index order, which is what keeps them
+    bit-identical.  An all-dead channel stays exactly NEG_INF (the
+    exp(0)=1 terms of -1e30 entries would drift it by +log(count) ulps
+    otherwise)."""
+    m = jax.ops.segment_max(v, ids, num_segments=num_segments,
+                            indices_are_sorted=indices_are_sorted)
+    s = jax.ops.segment_sum(jnp.exp(v - m[ids]), ids,
+                            num_segments=num_segments,
+                            indices_are_sorted=indices_are_sorted)
+    out = (m + jnp.log(s))[ids]
+    return jnp.where(out > NEG_INF / 2, out, NEG_INF)
+
+
 def merge_select_sorted(key_s, pb_s, pnb_s, *, k: int, beam: float,
                         iterative_topk: bool = False):
     """One hypothesis-unit row over a candidate set PRE-SORTED by key.
@@ -90,42 +111,26 @@ def merge_select_sorted(key_s, pb_s, pnb_s, *, k: int, beam: float,
     pb/pnb are the merged channels of the selected representative, and
     `valid` (int32 0/1) applies the beam threshold.
 
-    This function is the single source of truth for the merge/select
-    math: the pure-jnp ref path vmaps it per batch row and the Pallas
-    kernel (kernels/hypothesis_unit.py) calls it per grid step, which is
-    what makes interpret-mode parity bit-for-bit.  `iterative_topk`
-    picks the Mosaic-friendly k-pass argmax selection (the kernel path;
-    no sort primitive on TPU) over one `lax.top_k` — both have the same
-    semantics exactly (descending, ties to the lowest index; the score
-    domain is bounded below by NEG_INF, never -inf, and k <= N, so the
-    argmax loop can never re-pick an exhausted slot).
+    The sorted-row half of the hypothesis unit: the Pallas kernel
+    (kernels/hypothesis_unit.py) calls this per grid step.  The pure-jnp
+    ref path (`hypothesis_unit` below) is sort-free but shares
+    `_seg_lse`, summing each segment's terms in the same (original
+    index) order, which is what keeps interpret-mode parity
+    bit-for-bit.  `iterative_topk` picks the Mosaic-friendly k-pass
+    argmax selection (the kernel path; no sort primitive on TPU) over
+    one `lax.top_k` — both have the same semantics exactly (descending,
+    ties to the lowest index; the score domain is bounded below by
+    NEG_INF, never -inf, and k <= N, so the argmax loop can never
+    re-pick an exhausted slot).
     """
     n = key_s.shape[0]
     head = jnp.concatenate(
         [jnp.ones((1,), bool), key_s[1:] != key_s[:-1]])     # segment starts
-    tail = jnp.concatenate([head[1:], jnp.ones((1,), bool)])  # segment ends
+    ids = jnp.cumsum(head) - 1                               # segment ids
     live = key_s != HASH_SENTINEL
 
-    def seg_lse(v):
-        """Backward segmented inclusive logsumexp scan (Hillis-Steele):
-        out[j] = logsumexp(v[j : end of j's segment])."""
-        val, done = v, tail
-        d = 1
-        while d < n:
-            nxt_val = jnp.concatenate(
-                [val[d:], jnp.full((d,), NEG_INF, val.dtype)])
-            nxt_done = jnp.concatenate([done[d:], jnp.zeros((d,), bool)])
-            val = jnp.where(done, val, jnp.logaddexp(val, nxt_val))
-            done = done | nxt_done
-            d *= 2
-        return val
-
-    pb_m = seg_lse(pb_s)
-    pnb_m = seg_lse(pnb_s)
-    # an all-dead channel stays exactly NEG_INF (streaming logaddexp of
-    # -1e30 terms drifts by +log(count) ulps otherwise)
-    pb_m = jnp.where(pb_m > NEG_INF / 2, pb_m, NEG_INF)
-    pnb_m = jnp.where(pnb_m > NEG_INF / 2, pnb_m, NEG_INF)
+    pb_m = _seg_lse(pb_s, ids, n, indices_are_sorted=True)
+    pnb_m = _seg_lse(pnb_s, ids, n, indices_are_sorted=True)
 
     rep = head & live                       # one representative per live hash
     tot = jnp.where(rep, jnp.logaddexp(pb_m, pnb_m), NEG_INF)
@@ -154,20 +159,42 @@ def hypothesis_unit(hashes, pb, pnb, *, k: int, beam: float):
 
     hashes: (B, N) int32 31-bit prefix hashes; pb/pnb: (B, N) f32.
     Returns dict of (B, k) arrays: `idx` (selected candidate index into
-    the ORIGINAL row), merged `pb`/`pnb`, and boolean `valid`.
+    the ORIGINAL row — the first occurrence of the selected hash; 0 for
+    pruned slots), merged `pb`/`pnb`, and boolean `valid`.
+
+    Sort-free formulation of the same merge: candidates never move.
+    A single-operand key sort (XLA's fast path — the (key, iota) pair
+    sort behind `argsort` is ~8x slower on CPU) + `searchsorted` assign
+    every ORIGINAL position its segment id, the per-segment logsumexp is
+    a max + exp + segment-sum over unmoved positions (accumulating in
+    original index order, exactly the order the sorted-row kernel path
+    sums — the two stay bit-identical), and top-k reads original
+    positions directly, so the argsort permutation, its three payload
+    gathers, and the order re-mapping all disappear from the decode hot
+    path.
     """
-    n = hashes.shape[-1]
+    B, n = hashes.shape
     valid_in = jnp.logaddexp(pb, pnb) > NEG_INF / 2
     key = jnp.where(valid_in, hashes.astype(jnp.uint32), HASH_SENTINEL)
-    order = jnp.argsort(key, axis=-1, stable=True)
-    key_s = jnp.take_along_axis(key, order, axis=-1)
-    pb_s = jnp.take_along_axis(pb, order, axis=-1)
-    pnb_s = jnp.take_along_axis(pnb, order, axis=-1)
-    row = jax.vmap(
-        lambda ks, ps, qs: merge_select_sorted(ks, ps, qs, k=k, beam=beam))
-    pos, opb, opnb, oval = row(key_s, pb_s, pnb_s)
-    idx = jnp.minimum(jnp.take_along_axis(order, pos, axis=-1), n - 1)
-    return {"idx": idx, "pb": opb, "pnb": opnb, "valid": oval.astype(bool)}
+    key_sorted = jnp.sort(key, axis=-1)
+    ids = jax.vmap(
+        lambda ks, kk: jnp.searchsorted(ks, kk, side="left"))(key_sorted, key)
+    gids = (ids + jnp.arange(B, dtype=ids.dtype)[:, None] * n).reshape(-1)
+    iota = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (B, n))
+
+    pb_m = _seg_lse(pb.reshape(-1), gids, B * n).reshape(B, n)
+    pnb_m = _seg_lse(pnb.reshape(-1), gids, B * n).reshape(B, n)
+    first = jax.ops.segment_min(iota.reshape(-1), gids, num_segments=B * n)
+    rep = (iota == first[gids].reshape(B, n)) & (key != HASH_SENTINEL)
+    tot = jnp.where(rep, jnp.logaddexp(pb_m, pnb_m), NEG_INF)
+    best = jnp.max(tot, axis=-1, keepdims=True)
+    top, pos = jax.lax.top_k(tot, k)
+    valid = (top > NEG_INF / 2) & (top >= best - beam)
+    idx = jnp.where(valid, pos.astype(jnp.int32), 0)
+    opb = jnp.where(valid, jnp.take_along_axis(pb_m, pos, axis=-1), NEG_INF)
+    opnb = jnp.where(valid, jnp.take_along_axis(pnb_m, pos, axis=-1),
+                     NEG_INF)
+    return {"idx": idx, "pb": opb, "pnb": opnb, "valid": valid}
 
 
 def tds_conv(x, w, b, stride=1):
@@ -181,3 +208,33 @@ def tds_conv(x, w, b, stride=1):
     off = (jnp.arange(t_out) * stride)[:, None] + jnp.arange(k)[None, :]
     win = x[off]                                    # (t_out, k, W, Cin)
     return jnp.einsum("tkwc,kcd->twd", win, w) + b
+
+
+def tds_conv_fused(x, w, b, *, stride=1, relu=False, res=None):
+    """Slot-batched causal conv with the ASRPU conv epilogue fused in.
+
+    x: (B, k-1+T, W, Cin); w: (k, Cin, Cout); b: (Cout,); optional
+    res: (B, T//stride, W, Cout) residual added AFTER the ReLU (the TDS
+    block order).  Returns (B, T//stride, W, Cout).
+
+    One k-tap loop of (B*t_out*W, Cin) x (Cin, Cout) matmuls — the MXU
+    sees the slot axis folded into the row dimension — instead of the
+    gather-window einsum, which materializes a (t_out, k, W, Cin) window
+    tensor per conv per slot.
+    """
+    B, Tp, W, Cin = x.shape
+    k, _, Cout = w.shape
+    t_out = (Tp - (k - 1)) // stride
+    acc = jnp.zeros((B * t_out * W, Cout), jnp.float32)
+    for j in range(k):
+        # tap j of output t reads x[:, stride*t + j]
+        xj = jax.lax.slice_in_dim(x, j, j + stride * (t_out - 1) + 1,
+                                  stride=stride, axis=1)
+        acc = acc + xj.reshape(B * t_out * W, Cin).astype(jnp.float32) @ \
+            w[j].astype(jnp.float32)
+    y = acc.reshape(B, t_out, W, Cout) + b
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if res is not None:
+        y = y + res
+    return y

@@ -1,11 +1,15 @@
-"""TDS time-convolution Pallas kernel (causal, strided).
+"""TDS time-convolution Pallas kernel (causal, strided, slot-batched).
 
 The conv kernels of the acoustic-scoring phase (paper §4.2).  Input blocks
-overlap by the (k-1)-frame left halo — the BlockSpec index_map strides by
-the un-haloed tile so each grid step sees its context, exactly like the
-shared-memory input windows the ASRPU setup threads retain between
-kernels.  Channel mixing is per-w-column (k taps of (Cin x Cout) matmuls
-on the MXU).
+overlap by the (k-1)-frame left halo — each grid step slices its context
+out of the resident input, exactly like the shared-memory input windows
+the ASRPU setup threads retain between kernels.  Channel mixing is
+per-w-column (k taps of (Cin x Cout) matmuls on the MXU), and the conv
+epilogue — bias, ReLU, TDS residual — is fused into the kernel so the
+activation never round-trips to HBM between conv and epilogue.
+
+A leading slot axis maps to a batch grid dimension: the serving engine
+runs every concurrent stream's conv in ONE pallas_call.
 """
 from __future__ import annotations
 
@@ -16,12 +20,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, w_ref, b_ref, o_ref, *, k, stride, bt, W, Cin, Cout):
-    # x_ref holds the whole padded input (ASRPU keeps conv inputs resident
-    # in shared memory between kernels; TDS inputs are small enough that
-    # the VMEM analogue is exact).  Each grid step produces a bt-row tile.
-    i = pl.program_id(0)
-    x = x_ref[...]                       # (Tp, W*Cin)
+def _kernel(x_ref, w_ref, b_ref, *rest, k, stride, bt, W, Cin, Cout, relu):
+    # x_ref holds one slot's whole padded input (ASRPU keeps conv inputs
+    # resident in shared memory between kernels; TDS inputs are small
+    # enough that the VMEM analogue is exact).  Each grid step produces a
+    # bt-row tile of one slot.
+    res_ref, o_ref = (rest if len(rest) == 2 else (None, rest[0]))
+    i = pl.program_id(1)
+    x = x_ref[0]                         # (Tp, W*Cin)
     w = w_ref[...]                       # (k, Cin, Cout)
     start = i * bt * stride
     acc = jnp.zeros((bt * W, Cout), jnp.float32)
@@ -33,36 +39,60 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, *, k, stride, bt, W, Cin, Cout):
         acc += jax.lax.dot(xj.astype(jnp.float32),
                            w[j].astype(jnp.float32))
     acc = acc.reshape(bt, W, Cout) + b_ref[...][None, None, :]
-    o_ref[...] = acc.reshape(bt, W * Cout)
+    acc = acc.reshape(bt, W * Cout)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    if res_ref is not None:
+        acc = acc + res_ref[0]
+    o_ref[0] = acc
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "bt", "interpret"))
-def tds_conv_pallas(x, w, b, *, stride=1, bt=32, interpret=False):
-    """x: (k-1+T, W, Cin) left-padded input; w: (k, Cin, Cout); b: (Cout,).
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "bt", "relu", "interpret"))
+def tds_conv_pallas(x, w, b, res=None, *, stride=1, bt=32, relu=False,
+                    interpret=False):
+    """x: (B, k-1+T, W, Cin) left-padded input (a 3-D (k-1+T, W, Cin)
+    input is treated as B=1); w: (k, Cin, Cout); b: (Cout,); optional
+    res: (B, T // stride, W, Cout) residual added after the ReLU.
 
-    Returns (T // stride, W, Cout), matching ref.tds_conv.  Output t
-    consumes x[t*stride : t*stride + k] (causal window ending at
-    t*stride + k - 1 in padded coords).
+    Returns (B, T // stride, W, Cout) (batch squeezed for 3-D inputs),
+    matching ref.tds_conv_fused.  Output t consumes
+    x[:, t*stride : t*stride + k] (causal window ending at t*stride +
+    k - 1 in padded coords).  `bt` is halved until it divides the output
+    length (same fallback as ops.int8_matmul's bm), so frame counts that
+    are not a multiple of the tile still run.
     """
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+        res = None if res is None else res[None]
     k, Cin, Cout = w.shape
-    Tp, W, _ = x.shape
+    B, Tp, W, _ = x.shape
     T = Tp - (k - 1)
     assert T % stride == 0
     t_out = T // stride
     bt = min(bt, t_out)
-    assert t_out % bt == 0, (t_out, bt)
-    xf = x.reshape(Tp, W * Cin)
+    while t_out % bt:
+        bt //= 2
+    xf = x.reshape(B, Tp, W * Cin)
+    in_specs = [
+        pl.BlockSpec((1, Tp, W * Cin), lambda s, i: (s, 0, 0)),
+        pl.BlockSpec((k, Cin, Cout), lambda s, i: (0, 0, 0)),
+        pl.BlockSpec((Cout,), lambda s, i: (0,)),
+    ]
+    args = [xf, w, b]
+    if res is not None:
+        in_specs.append(pl.BlockSpec((1, bt, W * Cout),
+                                     lambda s, i: (s, i, 0)))
+        args.append(res.reshape(B, t_out, W * Cout))
     out = pl.pallas_call(
         functools.partial(_kernel, k=k, stride=stride, bt=bt, W=W,
-                          Cin=Cin, Cout=Cout),
-        grid=(t_out // bt,),
-        in_specs=[
-            pl.BlockSpec((Tp, W * Cin), lambda i: (0, 0)),
-            pl.BlockSpec((k, Cin, Cout), lambda i: (0, 0, 0)),
-            pl.BlockSpec((Cout,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((bt, W * Cout), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((t_out, W * Cout), jnp.float32),
+                          Cin=Cin, Cout=Cout, relu=relu),
+        grid=(B, t_out // bt),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bt, W * Cout), lambda s, i: (s, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, t_out, W * Cout), jnp.float32),
         interpret=interpret,
-    )(xf, w, b)
-    return out.reshape(t_out, W, Cout)
+    )(*args)
+    out = out.reshape(B, t_out, W, Cout)
+    return out[0] if squeeze else out

@@ -127,12 +127,6 @@ def init_tds(key, cfg: TDSConfig, dtype=jnp.float32) -> dict:
     return params
 
 
-def _ln(p, x):
-    mu = x.mean(-1, keepdims=True)
-    var = x.var(-1, keepdims=True)
-    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
-
-
 def init_stream_state(cfg: TDSConfig) -> dict:
     """Left-context ring buffers — the scratchpad the paper keeps in the
     512KB shared memory between decoding steps (~275KB; see DESIGN.md)."""
@@ -163,67 +157,113 @@ def state_bytes(cfg: TDSConfig, bytes_per_el: int = 1) -> int:
                for a in jax.tree.leaves(st))
 
 
-def _conv_step(p, spec: KernelSpec, state, x):
-    """Causal strided time-conv. x: (m, w, c_in); state: (k-1, w, c_in)."""
-    k, s = spec.kernel, spec.stride
-    m = x.shape[0]
-    assert m % s == 0, (m, s)
-    xp = jnp.concatenate([state, x], axis=0)        # (k-1+m, w, c_in)
-    t_out = m // s
-    # output t consumes xp[s*t : s*t+k] (ends at input index s*t + s - 1)
-    off = (jnp.arange(t_out) * s)[:, None] + jnp.arange(k)[None, :]
-    win = xp[off]                                    # (t_out, k, w, c_in)
-    y = jnp.einsum("tkwc,kcd->twd", win, p["w"]) + p["b"]
-    new_state = xp[-(k - 1):] if k > 1 else state
-    return y, new_state
+def quantize_params(params, cfg: TDSConfig) -> dict:
+    """Pre-quantize every FC/head weight matrix ONCE (int8 + per-output
+    scales): {kernel name: {"wq", "ws"}}.  The serving engine builds
+    this at engine-construction time so the decode hot path only ever
+    quantizes activations (`ops.int8_matmul_prepared`) instead of
+    re-quantizing static weights on every decoding step."""
+    from repro.kernels import ops
+    prepared = {}
+    for spec in build_kernel_specs(cfg):
+        if spec.kind in ("fc", "head"):
+            wq, ws = ops.prepare_int8_weights(params[spec.name]["w"])
+            prepared[spec.name] = {"wq": wq, "ws": ws}
+    return prepared
 
 
-def forward(params, cfg: TDSConfig, feats: jax.Array,
-            state: Optional[dict] = None, use_int8: bool = False,
-            kernels=None):
-    """feats: (T, n_mfcc). Returns (log_probs (T', V), new_state).
+def forward_batched(params, cfg: TDSConfig, feats: jax.Array, state: dict,
+                    use_int8: bool = False, kernels=None,
+                    prepared: Optional[dict] = None):
+    """Slot-native TDS forward.  feats: (B, T, n_mfcc); state: the
+    batched stream state ((B, k-1, w, c_in) per conv).  Returns
+    (log_probs (B, T', V), new_state).
 
-    state=None => offline (zero left context).  T must be divisible by the
-    total subsample.  use_int8 routes FC/head matmuls through the int8
-    quantized path (core/quant) — ASRPU's 8-bit MAC; `kernels` is the
-    KernelPolicy dispatching that Pallas-backed op (None = auto).
+    The slot axis is folded into the row dimension of every matmul —
+    (B*T, w*c) rows for FC/head/LayerNorm, (B*T*w, c_in) rows for each
+    conv tap — so the MXU sees ONE large matmul per kernel instead of B
+    independent small ones (the old path vmapped the whole forward per
+    slot).  Convs, LayerNorms, and the int8 FC path dispatch through
+    `kernels` (a KernelPolicy) as hot-path ops: pure-jnp ref on CPU,
+    the Pallas kernels (conv epilogue fused: bias+ReLU+residual) under
+    interpret/Mosaic.  `prepared` (from `quantize_params`) supplies
+    pre-quantized int8 weights; without it the use_int8 path quantizes
+    weights on the fly (offline/one-shot use).
     """
-    specs = build_kernel_specs(cfg)
-    st_in = state if state is not None else init_stream_state(cfg)
-    new_state = dict(st_in)
-    w = cfg.stages[0].feat
-    x = feats[:, :, None]                            # (T, w, 1)
+    from repro.kernels import ops
 
-    def matmul(xm, pw, pb):
+    specs = build_kernel_specs(cfg)
+    new_state = dict(state)
+    w = cfg.stages[0].feat
+    B = feats.shape[0]
+    x = feats[:, :, :, None]                         # (B, T, w, 1)
+
+    def matmul(xm, name, p):
         if use_int8:
-            from repro.kernels import ops
-            return ops.int8_matmul(xm, pw, policy=kernels) + pb
-        return xm @ pw + pb
+            if prepared is not None and name in prepared:
+                pq = prepared[name]
+                return ops.int8_matmul_prepared(xm, pq["wq"], pq["ws"],
+                                                policy=kernels,
+                                                hot=True) + p["b"]
+            return ops.int8_matmul(xm, p["w"], policy=kernels,
+                                   hot=True) + p["b"]
+        return xm @ p["w"] + p["b"]
 
     for spec in specs:
         p = params[spec.name]
         if spec.kind == "conv":
-            res = x
-            y, ns = _conv_step(p, spec, st_in[spec.name], x)
-            new_state[spec.name] = ns
-            if spec.activation == "relu":
-                y = jax.nn.relu(y)
-            x = y + res if (spec.residual and res.shape == y.shape) else y
+            k, s = spec.kernel, spec.stride
+            m = x.shape[1]
+            assert m % s == 0, (m, s)
+            xp = jnp.concatenate([state[spec.name], x], axis=1)
+            res = x if (spec.residual and s == 1
+                        and x.shape[-1] == spec.n_out // w) else None
+            x = ops.tds_conv(xp, p["w"], p["b"], stride=s,
+                             relu=spec.activation == "relu", res=res,
+                             policy=kernels, hot=True)
+            new_state[spec.name] = xp[:, -(k - 1):] if k > 1 \
+                else state[spec.name]
         elif spec.kind == "layernorm":
-            t = x.shape[0]
-            x = _ln(p, x.reshape(t, -1)).reshape(x.shape)
+            t = x.shape[1]
+            xm = ops.layernorm(x.reshape(B * t, -1), p["scale"], p["bias"],
+                               policy=kernels, hot=True)
+            x = xm.reshape(x.shape)
         else:  # fc / head
-            t = x.shape[0]
-            xm = x.reshape(t, -1)
+            t = x.shape[1]
+            xm = x.reshape(B * t, -1)
             if spec.activation == "relu":      # fc1: start of the FC block
                 fc_res = xm
-            y = matmul(xm, p["w"], p["b"])
+            y = matmul(xm, spec.name, p)
             if spec.activation == "relu":
                 y = jax.nn.relu(y)
             if spec.residual and y.shape == fc_res.shape:
                 y = y + fc_res                 # TDS residual: whole FC block
             if spec.name == "head":
-                return jax.nn.log_softmax(y, axis=-1), new_state
+                logp = jax.nn.log_softmax(y, axis=-1)
+                return logp.reshape(B, t, -1), new_state
             c = spec.n_out // w
-            x = y.reshape(t, w, c)
+            x = y.reshape(B, t, w, c)
     raise AssertionError("head kernel missing")
+
+
+def forward(params, cfg: TDSConfig, feats: jax.Array,
+            state: Optional[dict] = None, use_int8: bool = False,
+            kernels=None, prepared: Optional[dict] = None):
+    """feats: (T, n_mfcc). Returns (log_probs (T', V), new_state).
+
+    state=None => offline (zero left context).  T must be divisible by the
+    total subsample.  use_int8 routes FC/head matmuls through the int8
+    quantized path — ASRPU's 8-bit MAC (`prepared` from
+    `quantize_params` skips the per-call weight quantization); `kernels`
+    is the KernelPolicy dispatching the Pallas-backed ops (None = auto).
+
+    This is exactly the B=1 slice of `forward_batched` — single-stream
+    and slot-pooled decoding share ONE code path, which is what keeps
+    the streaming-vs-offline and multi-stream parity tests bit-honest.
+    """
+    st_in = state if state is not None else init_stream_state(cfg)
+    bst = jax.tree.map(lambda a: a[None], st_in)
+    logp, ns = forward_batched(params, cfg, feats[None], bst,
+                               use_int8=use_int8, kernels=kernels,
+                               prepared=prepared)
+    return logp[0], jax.tree.map(lambda a: a[0], ns)

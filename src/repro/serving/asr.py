@@ -2,22 +2,33 @@
 
 The fused decoding step (paper §3.1: acoustic scoring — MFCC + the TDS
 kernel sequence — then one hypothesis expansion per emitted acoustic
-frame) is pure in all carried state.  Acoustic scoring is vmapped over
-a leading slot axis; hypothesis expansion is natively slot-batched
-(`decoder.expand_step_batched`): the shared lexicon trie / bigram table
-are gathered once over the flattened slot index set and the fused
-Pallas hypothesis unit runs with a batch grid axis.  Every pytree leaf
-of the TDS left-context state and of the `BeamState` carries a leading
-slot axis, each slot keeps its own sample buffer, and one jitted step
-advances every slot that has a full window buffered.  Slots without a
-window are masked out — their carried state passes through unchanged —
-so each slot's trajectory is exactly the single-stream decoder's.
+frame) is pure in all carried state, and slot-native END TO END:
+acoustic scoring runs through `tds.forward_batched` (the slot axis
+folds into the row dimension of every FC/LayerNorm matmul and conv tap
+— no per-slot vmap), the MFCC tail is the fused logmel kernel, int8
+programs use weights pre-quantized ONCE at engine build
+(`AsrProgram.prepare_params`), and hypothesis expansion is natively
+slot-batched (`decoder.expand_step_batched`): the shared lexicon trie /
+bigram table are gathered once over the flattened slot index set and
+the fused Pallas hypothesis unit runs with a batch grid axis.  Every
+pytree leaf of the TDS left-context state and of the `BeamState`
+carries a leading slot axis, each slot keeps its own sample buffer, and
+one jitted step advances every slot that has a full window buffered.
+Slots without a window are masked out — their carried state passes
+through unchanged — so each slot's trajectory is exactly the
+single-stream decoder's.
 
 Window bookkeeping is the setup-thread arithmetic from core/features:
 `frames_producible` decides whether a slot can step (enough buffered
 samples for plan.feat_frames_per_step whole frames) and
 `consumed_samples` decides how many samples a step retires (the MFCC
-framing overlap stays buffered).
+framing overlap stays buffered).  When a slot has several whole windows
+buffered (bulk decoding — `serve(utterances)`), one fused step consumes
+up to `AsrProgram.max_windows_per_step` of them at once: each window's
+samples are extracted exactly as a w=1 step would see them, so the fold
+is bit-identical to stepping windows one at a time, but every TDS
+weight matrix is read once per multi-window step instead of once per
+80 ms window (the acoustic forward is weight-bandwidth-bound at B=1).
 
 Two API layers:
   * slot level — `feed_slot` / `pump` / `slot_best` / `reset_slot`:
@@ -64,6 +75,10 @@ class AsrEngine(Engine):
         assert self._spp == self.plan.samples_per_step, \
             (self._spp, self.plan.samples_per_step)
         assert features.frames_producible(self._need, fc) == nfr
+        self._buckets = self.program.step_buckets()
+        # int8 weights are quantized exactly ONCE, here — the decoding
+        # step then only quantizes activations (ops.int8_matmul_prepared)
+        self._prepared = self.program.prepare_params(params)
         self._jit_step = jax.jit(self._masked_step_fn())
         self._jit_reset = jax.jit(self._reset_slot_fn())
         self._jit_best = jax.jit(self._slot_best_fn(final=False))
@@ -72,27 +87,34 @@ class AsrEngine(Engine):
 
     # ---- the fused decoding-step program -----------------------------
     def _masked_step_fn(self):
-        """One slot-native decoding step: acoustic scoring (MFCC + the
-        TDS kernel sequence) is vmapped over the slot axis, then each
-        emitted acoustic frame runs ONE natively batched hypothesis
-        expansion — shared lexicon/LM gathers over the flattened slot
-        index set and the fused hypothesis unit with a batch grid axis
-        (the old path vmapped the whole per-stream step, re-gathering
-        the shared tables slot by slot).  Masked slots carry their
-        state through unchanged."""
+        """One slot-native decoding step, batched end to end: acoustic
+        scoring (the fused logmel MFCC tail + the TDS kernel sequence)
+        runs natively over the slot axis — every FC/head/LayerNorm sees
+        one (B*T, w*c)-row matmul and every conv tap one (B*T*w, c)-row
+        matmul, instead of the old `jax.vmap(acoustic)` of B tiny
+        per-slot ops — then each emitted acoustic frame runs ONE
+        natively batched hypothesis expansion (shared lexicon/LM gathers
+        over the flattened slot index set + the fused hypothesis unit).
+        Masked slots carry their state through unchanged."""
         prog = self.program
         nfr = self.plan.feat_frames_per_step
         kernels = self.config.kernels
 
-        def acoustic(params, stream_state, samples):
-            feats = features.mfcc(samples, prog.feat_cfg)[:nfr]
-            return tds.forward(params, prog.tds_cfg, feats, stream_state,
-                               use_int8=prog.use_int8, kernels=kernels)
-
-        vacoustic = jax.vmap(acoustic, in_axes=(None, 0, 0))
-
-        def step(params, stream_state, beam_state, samples, active):
-            logp, new_ss = vacoustic(params, stream_state, samples)
+        def step(params, prepared, stream_state, beam_state, samples,
+                 active):
+            # samples: (B, w, samples_per_window) — w buffered 80 ms
+            # windows per slot, extracted window by window (each row is
+            # exactly the signal a w=1 step would see, so fusing windows
+            # is bit-identical to stepping them one at a time).  The
+            # (B, w) axes fold into the feature-frame axis, and from
+            # there into the row dimension of every TDS matmul.
+            B, w, _ = samples.shape
+            feats = features.mfcc(samples, prog.feat_cfg, use_pallas=True,
+                                  kernels=kernels, hot=True)[:, :, :nfr]
+            feats = feats.reshape(B, w * nfr, -1)
+            logp, new_ss = tds.forward_batched(
+                params, prog.tds_cfg, feats, stream_state,
+                use_int8=prog.use_int8, kernels=kernels, prepared=prepared)
 
             def expand(bs, lp):            # lp: (B, V) — one frame, all slots
                 return dec.expand_step_batched(bs, lp, prog.lex, prog.lm,
@@ -180,31 +202,43 @@ class AsrEngine(Engine):
         self._slot_bufs[slot] = np.concatenate(
             [self._slot_bufs[slot], np.asarray(samples, np.float32)])
 
-    def slot_can_step(self, slot: int) -> bool:
-        """Setup-thread check: a full window of whole frames buffered."""
+    def slot_windows(self, slot: int) -> int:
+        """Setup-thread check: whole step_ms windows buffered in a slot."""
         return features.frames_producible(
             self._slot_bufs[slot].shape[0],
-            self.program.feat_cfg) >= self.plan.feat_frames_per_step
+            self.program.feat_cfg) // self.plan.feat_frames_per_step
+
+    def slot_can_step(self, slot: int) -> bool:
+        """A full window of whole frames buffered."""
+        return self.slot_windows(slot) >= 1
 
     def _step(self) -> bool:
-        """One vmapped decoding step advancing every slot with a full
-        window; masked slots carry state through unchanged.  False (and
-        nothing runs) when no slot can produce output — all setup
-        threads returned zero."""
-        active = np.array([self.slot_can_step(s)
-                           for s in range(self.n_slots)])
-        if not active.any():
+        """One fused decoding step advancing every slot with enough
+        buffered windows; masked slots carry state through unchanged.
+        The step takes `w` windows at once — the largest step bucket any
+        slot can fill (bulk decoding amortizes weight reads + dispatch
+        over w windows; live streaming naturally runs w=1).  Slots with
+        fewer than w windows wait for a later, smaller-w pump round.
+        False (and nothing runs) when no slot can produce output — all
+        setup threads returned zero."""
+        avail = np.array([self.slot_windows(s)
+                          for s in range(self.n_slots)])
+        if not (avail >= 1).any():
             return False
+        w = next(b for b in self._buckets if b <= avail.max())
+        active = avail >= w
         self._ensure_state()
-        batch = np.zeros((self.n_slots, self._need), np.float32)
+        batch = np.zeros((self.n_slots, w, self._need), np.float32)
         for s in range(self.n_slots):
             if active[s]:
-                batch[s] = self._slot_bufs[s][:self._need]
-                self._slot_bufs[s] = self._slot_bufs[s][self._spp:]
+                for i in range(w):
+                    off = i * self._spp
+                    batch[s, i] = self._slot_bufs[s][off:off + self._need]
+                self._slot_bufs[s] = self._slot_bufs[s][w * self._spp:]
         self._stream_state, self._beam = self._jit_step(
-            self.params, self._stream_state, self._beam,
+            self.params, self._prepared, self._stream_state, self._beam,
             jnp.asarray(batch), jnp.asarray(active))
-        self._slot_steps += active
+        self._slot_steps += active * w
         self.n_steps += 1
         return True
 

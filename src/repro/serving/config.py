@@ -33,11 +33,39 @@ class AsrProgram:
     dec_cfg: DecoderConfig = DECODER_CONFIG
     use_int8: bool = False
     step_ms: float = 80.0
+    # Upper bound on how many buffered step_ms windows ONE fused decoding
+    # step may consume (powers of two below it are the step buckets, like
+    # LmProgram.prefill_buckets).  Live streaming still steps window by
+    # window; bulk decoding (whole utterances buffered) folds up to this
+    # many windows into the acoustic forward's row dimension, reading
+    # each FC weight matrix once per multi-window step instead of once
+    # per 80 ms window.  1 disables fusion.
+    max_windows_per_step: int = 4
+
+    def step_buckets(self) -> Tuple[int, ...]:
+        """Descending window counts a fused step may take (one jit entry
+        each, traced lazily on first use)."""
+        out, b = [], 1
+        while b <= self.max_windows_per_step:
+            out.append(b)
+            b *= 2
+        return tuple(reversed(out))
 
     def step_plan(self) -> StepPlan:
         """The static setup-thread schedule for one decoding step."""
         return make_step_plan(self.tds_cfg, self.feat_cfg, self.step_ms,
                               self.dec_cfg.beam_size)
+
+    def prepare_params(self, params):
+        """Build-time weight preparation for the decoding step: when the
+        program runs int8 acoustic scoring, quantize every FC/head
+        weight matrix ONCE (`tds.quantize_params`) so the hot path only
+        quantizes activations.  Returns None for the fp32 program — the
+        engine passes the result straight into `tds.forward_batched`."""
+        if not self.use_int8:
+            return None
+        from repro.models import tds
+        return tds.quantize_params(params, self.tds_cfg)
 
     def with_beam_width(self, beam: float) -> "AsrProgram":
         """ConfigureBeamWidth as a pure derivation, not a mutation."""

@@ -28,6 +28,17 @@ def test_int8_matmul_matches_ref(m, k, n):
                                rtol=1e-5, atol=1e-4)
 
 
+def test_int8_matmul_prepared_matches_unprepared():
+    """prepare_int8_weights + int8_matmul_prepared == int8_matmul exactly
+    (the prepared split moves weight quantization out of the call, it
+    must not change a single bit of the result)."""
+    x, w = _arr(9, 200), _arr(200, 96)
+    wq, ws = ops.prepare_int8_weights(w)
+    np.testing.assert_array_equal(
+        np.asarray(ops.int8_matmul_prepared(x, wq, ws)),
+        np.asarray(ops.int8_matmul(x, w)))
+
+
 @pytest.mark.parametrize("m,k,n", [(16, 512, 256)])
 def test_int8_matmul_quant_error_small(m, k, n):
     x, w = _arr(m, k), _arr(k, n)
@@ -83,11 +94,12 @@ def test_flash_attention_matches_model_attention():
 # ---------------------------------------------------------------------------
 # norms
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("t,d", [(32, 64), (256, 80), (100, 257)])
+@pytest.mark.parametrize("t,d", [(32, 64), (256, 80), (100, 257),
+                                 (37, 80), (300, 129)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_layernorm(t, d, dtype):
-    if t % 256 and t % 100:  # norm_pallas requires T % bt == 0
-        t = 256
+    """Includes row counts that are no multiple of the row tile (the
+    kernel pads rows, which are independent, and slices the pad off)."""
     x = _arr(t, d).astype(dtype)
     s, b = _arr(d), _arr(d)
     np.testing.assert_allclose(
@@ -126,6 +138,9 @@ def test_beam_prune(n, beam):
 @pytest.mark.parametrize("k,stride,t,w,cin,cout", [
     (9, 1, 32, 16, 5, 7), (9, 2, 32, 16, 5, 7), (10, 2, 64, 80, 15, 19),
     (21, 1, 64, 8, 3, 3),
+    # t_out not divisible by the default bt=32 tile: the kernel used to
+    # hard-assert here; now bt halves until it divides (40 -> 8, 48 -> 16)
+    (9, 1, 48, 16, 5, 7), (9, 1, 40, 8, 3, 3), (5, 2, 72, 8, 3, 3),
 ])
 def test_tds_conv(k, stride, t, w, cin, cout):
     x = _arr(k - 1 + t, w, cin)
@@ -135,3 +150,28 @@ def test_tds_conv(k, stride, t, w, cin, cout):
         np.asarray(ops.tds_conv(x, wgt, b, stride=stride)),
         np.asarray(ref.tds_conv(x, wgt, b, stride=stride)),
         rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("batch,relu,residual", [
+    (1, True, False), (3, True, True), (2, False, True), (4, False, False),
+])
+def test_tds_conv_batched_fused_epilogue(batch, relu, residual):
+    """Slot-batched conv with the fused bias+ReLU+residual epilogue
+    (interpret) vs the epilogue applied around the unbatched ref conv."""
+    k, t, w, cin = 9, 24, 8, 6
+    cout = cin if residual else 7
+    x = _arr(batch, k - 1 + t, w, cin)
+    wgt = _arr(k, cin, cout, scale=0.3)
+    b = _arr(cout)
+    res = _arr(batch, t, w, cout) if residual else None
+    got = ops.tds_conv(x, wgt, b, relu=relu, res=res,
+                       policy=ops.KernelPolicy("interpret"))
+    assert got.shape == (batch, t, w, cout)
+    for i in range(batch):
+        want = ref.tds_conv(x[i], wgt, b)
+        if relu:
+            want = jnp.maximum(want, 0.0)
+        if residual:
+            want = want + res[i]
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)

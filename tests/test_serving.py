@@ -390,6 +390,39 @@ def test_masked_prefill_matches_unmasked(arch):
     assert np.asarray(c_got["offset"]).tolist() == [plen]
 
 
+def test_asr_engine_quantizes_weights_exactly_once(monkeypatch):
+    """An int8 AsrProgram quantizes its FC/head weights ONCE at engine
+    build (`AsrProgram.prepare_params` -> `tds.quantize_params`), and
+    the decoding step never re-quantizes a weight: tracing + running the
+    step must add zero `prepare_int8_weights` calls (same style as the
+    LM bucketed-prefill jit-entry bound).  The old path called
+    `quantize_rows(w.T)` inside `ops.int8_matmul` on every step."""
+    from repro.kernels import ops
+
+    words, lex, lm, dcfg, params = _asr_system()
+    program = AsrProgram(TINY_TDS, lex, lm, FEAT16, dcfg, use_int8=True)
+    calls = []
+    orig = ops.prepare_int8_weights
+    monkeypatch.setattr(ops, "prepare_int8_weights",
+                        lambda w: calls.append(w.shape) or orig(w))
+    engine = AsrEngine(EngineConfig(program, n_slots=2), params)
+    n_fc = sum(s.kind in ("fc", "head")
+               for s in tds.build_kernel_specs(TINY_TDS))
+    assert len(calls) == n_fc, (len(calls), n_fc)
+    data = SyntheticASR(words)
+    got = engine.serve([data.utterance(0)["audio"],
+                        data.utterance(1)["audio"]])
+    assert all(np.isfinite(r["score"]) for r in got)
+    assert len(calls) == n_fc, \
+        f"weight quantization ran in the serving hot path: {calls[n_fc:]}"
+
+    # and the prepared path decodes exactly like the single-slot engine
+    ref = AsrEngine(EngineConfig(program, n_slots=1), params)
+    for audio, res in zip([data.utterance(0)["audio"],
+                           data.utterance(1)["audio"]], got):
+        _same(res, ref.serve([audio])[0])
+
+
 def test_deprecated_shims_warn_and_still_work():
     """ASRPU / MultiStreamASRPU emit DeprecationWarning at construction
     and keep decoding through the batched-expansion engine."""
