@@ -7,9 +7,13 @@ Non-gating perf-regression annotator for the CI bench-smoke job:
 
 prints one line per row present in BOTH files and emits a GitHub
 `::warning::` annotation for every row whose fresh time exceeds
-threshold x baseline.  `*_pre_refactor` trajectory keys and rows missing
-from either side are skipped.  Always exits 0 — bench hosts are noisy
-shared runners, so regressions annotate the run instead of failing it.
+threshold x baseline.  `*_pre_refactor` trajectory keys are skipped;
+baseline rows ABSENT from the fresh run also get a `::warning::` — a
+renamed or dropped bench row would otherwise silently exit regression
+coverage.  (Fresh-only rows are fine: they are new benches the baseline
+will pick up when re-committed.)  Always exits 0 — bench hosts are
+noisy shared runners, so regressions annotate the run instead of
+failing it.
 """
 from __future__ import annotations
 
@@ -34,6 +38,13 @@ def compare(base: dict, fresh: dict, threshold: float) -> list:
     return regressed
 
 
+def missing_rows(base: dict, fresh: dict) -> list:
+    """Baseline rows the fresh run no longer measures (renamed/dropped
+    benches silently leave regression coverage without this check)."""
+    return [name for name in sorted(set(base) - set(fresh))
+            if not name.endswith("_pre_refactor")]
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("base", help="committed baseline JSON (BENCH_decode.json)")
@@ -45,6 +56,11 @@ def main(argv=None) -> None:
     base = json.loads(pathlib.Path(args.base).read_text())
     fresh = json.loads(pathlib.Path(args.fresh).read_text())
     regressed = compare(base, fresh, args.threshold)
+    for name in missing_rows(base, fresh):
+        print(f"::warning file={args.base}::baseline row {name} is "
+              f"missing from the fresh run — renamed or dropped rows "
+              f"silently leave perf-regression coverage; re-measure it "
+              f"or update {args.base}")
     if regressed:
         for name, b, f, ratio in regressed:
             print(f"::warning file={args.base}::{name} regressed "

@@ -45,6 +45,19 @@ def quantize_rows(x):
     return q, s
 
 
+def shard_local_cols(x, kloc, axis):
+    """Model-parallel contraction helper: slice the activation columns
+    matching this device's feature-axis weight shard — rows
+    [i*kloc, (i+1)*kloc) of the full weight, where i is the device's
+    index along the shard_map mesh `axis`.  Shared by the fp32
+    (`tds.forward_batched`) and int8 (`int8_matmul_prepared`) paths so
+    the slicing rule cannot diverge between them; callers detect a
+    sharded weight by shape (w.shape[0] != x.shape[1]) and psum the
+    local partial products."""
+    i = jax.lax.axis_index(axis)
+    return jax.lax.dynamic_slice_in_dim(x, i * kloc, kloc, axis=1)
+
+
 def prepare_int8_weights(w):
     """Quantize a static weight matrix ONCE: w (K, N) float ->
     (wq (K, N) i8, ws (N,) f32 per-output-channel scales).
@@ -57,14 +70,32 @@ def prepare_int8_weights(w):
 
 
 def int8_matmul_prepared(x, wq, ws, *, bm=128, bn=128, bk=128, policy=None,
-                         hot=False):
+                         hot=False, axis=None):
     """x: (M, K) float; wq/ws from `prepare_int8_weights` -> (M, N) f32.
 
     The hot-path half of the int8 pipeline: per-row activation
     quantization + int8 MXU matmul + fp32 rescale, with the weight-side
-    quantization already done."""
+    quantization already done.
+
+    `axis` names the shard_map mesh axis of a model-parallel caller
+    (the sharded serving step): when `wq` arrives as a feature-axis
+    shard — (K/n_model, N), detected by shape against `x` — the
+    activations are quantized on their FULL rows first (so the per-row
+    scales match the unsharded path exactly), the matching xq columns
+    are sliced locally, and the rescaled partial products are psummed
+    over `axis`."""
     mode = resolve(policy, hot=hot)
     xq, xs = quantize_rows(x)
+    if axis is not None and wq.shape[0] != xq.shape[1]:
+        xloc = shard_local_cols(xq, wq.shape[0], axis)
+        return jax.lax.psum(
+            _int8_dispatch(xloc, wq, xs, ws, mode, bm=bm, bn=bn, bk=bk),
+            axis)
+    return _int8_dispatch(xq, wq, xs, ws, mode, bm=bm, bn=bn, bk=bk)
+
+
+def _int8_dispatch(xq, wq, xs, ws, mode, *, bm, bn, bk):
+    """Mode-resolved int8 matmul core on (possibly shard-local) operands."""
     if mode == "ref":
         return _ref.int8_matmul(xq, wq, xs, ws)
     M, K = xq.shape

@@ -18,6 +18,16 @@ but ``ref`` for hot-path ops (the fused hypothesis unit runs inside the
 per-frame decode scan).  The backend probe is hoisted out of the call
 path — `jax.default_backend()` is read once per process, not per call
 (it used to be re-queried by every op via `ops._interpret`).
+
+Dispatch composes with `shard_map` (the mesh-sharded serving step runs
+every hot-path op inside a per-device program): resolution happens at
+Python trace time, outside any mesh axis, so ``ref``/``interpret``
+lower to ordinary per-device XLA/Pallas calls on the shard-local
+shapes, and ``mosaic`` keeps one pallas_call per device.  Only the
+model-parallel matmul wrappers themselves (ops.int8_matmul_prepared's
+``axis=``, tds.forward_batched's contraction) ever touch the mesh axis
+— kernels never psum internally (Mosaic-under-shard_map shares the
+real-TPU caveat tracked in ROADMAP.md).
 """
 from __future__ import annotations
 

@@ -19,6 +19,15 @@ Two modes, one shape (repro.serving): a fixed slot pool owned by an
   PYTHONPATH=src python -m repro.launch.serve --mode asr --streams 4
   PYTHONPATH=src python -m repro.launch.serve --mode lm --arch mamba2-1.3b \
       --requests 8 --max-new 32
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \
+      python -m repro.launch.serve --mode asr --streams 4 --mesh 2
+
+`--mesh N` runs the ASR fused step model-parallel: every TDS FC/head
+weight is sharded over N devices on its feature axis and the step runs
+under shard_map (partial-sum + all-reduce per matmul) — each device
+reads 1/N of the FC weight bytes per window, the lever the flat B=1
+`rtf_measured_step` is bound by (see ROADMAP).  Transcripts are
+parity-tested against the unsharded engine (tests/test_sharded_serving).
 """
 from __future__ import annotations
 
@@ -37,6 +46,22 @@ from repro.serving import (AsrEngine, AsrProgram, EngineConfig, LmEngine,
 
 def _policy(args) -> KernelPolicy:
     return KernelPolicy(args.kernels)
+
+
+def serve_mesh(n_model: int):
+    """`--mesh N` -> a 1-axis ('model',) Mesh over N devices, or None
+    for N <= 1 (the exact unsharded single-device step).  On a CPU host
+    the devices come from XLA_FLAGS=--xla_force_host_platform_device_count
+    (set it BEFORE the process starts; jax locks the device count at
+    first use)."""
+    if n_model <= 1:
+        return None
+    if jax.device_count() < n_model:
+        raise SystemExit(
+            f"--mesh {n_model} needs {n_model} devices but jax sees "
+            f"{jax.device_count()}; on a CPU host prefix the command with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_model}")
+    return jax.make_mesh((n_model,), ("model",))
 
 
 def serve_lm(args):
@@ -86,13 +111,17 @@ def asr_demo_system():
     return tds_cfg, words, lex, lm, params, DECODER_CONFIG
 
 
-def asr_demo_engine(n_slots: int, kernels: KernelPolicy = None) -> tuple:
-    """(engine, words): an AsrEngine over the demo system's program."""
+def asr_demo_engine(n_slots: int, kernels: KernelPolicy = None,
+                    mesh=None) -> tuple:
+    """(engine, words): an AsrEngine over the demo system's program.
+    `mesh` (see `serve_mesh`) shards the TDS FC/head weights over its
+    'model' axis and runs the fused step under shard_map."""
     tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
     program = AsrProgram(tds_cfg, lex, lm, dec_cfg=dec_cfg,
                         ).with_beam_width(25.0)
     engine = AsrEngine(EngineConfig(program, n_slots=n_slots,
-                                    kernels=kernels or KernelPolicy()),
+                                    kernels=kernels or KernelPolicy(),
+                                    mesh=mesh),
                        params)
     return engine, words
 
@@ -102,7 +131,7 @@ def serve_asr(args):
     80 ms chunks; poll() tracks the live best hypothesis."""
     from repro.data.pipeline import SyntheticASR
 
-    engine, words = asr_demo_engine(1, _policy(args))
+    engine, words = asr_demo_engine(1, _policy(args), serve_mesh(args.mesh))
     data = SyntheticASR(words)
     spp = engine.plan.samples_per_step
     n_utts = 2 if args.utterances is None else args.utterances
@@ -130,7 +159,8 @@ def serve_asr_multistream(args):
     (continuous batching, mirroring serve_lm's slot pool)."""
     from repro.data.pipeline import SyntheticASR
 
-    engine, words = asr_demo_engine(args.streams, _policy(args))
+    engine, words = asr_demo_engine(args.streams, _policy(args),
+                                    serve_mesh(args.mesh))
     data = SyntheticASR(words)
     # default: one utterance per slot; an explicit --utterances wins
     # (fewer than --streams just leaves the extra slots masked idle)
@@ -171,8 +201,19 @@ def main(argv=None):
                     help="KernelPolicy mode for Pallas-backed decode ops "
                          "(auto: Mosaic on TPU, ref for the hot path on "
                          "CPU)")
+    ap.add_argument("--mesh", type=int, default=1, metavar="N",
+                    help="ASR model-parallel width: shard every TDS "
+                         "FC/head weight over N devices ('model' mesh "
+                         "axis) and run the fused step under shard_map; "
+                         "1 = the unsharded single-device step (on CPU "
+                         "hosts set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first)")
     args = ap.parse_args(argv)
     if args.mode == "lm":
+        if args.mesh > 1:
+            ap.error("--mesh is ASR-only (LmEngine rejects a mesh; "
+                     "sharded LM serving goes through launch/steps.py "
+                     "build_cell)")
         return serve_lm(args)
     if args.streams > 1:
         return serve_asr_multistream(args)

@@ -26,6 +26,7 @@ from repro.launch.steps import build_lm, make_train_step
 from repro.optim import adamw
 from repro.parallel import sharding as shlib
 from repro.runtime import fault
+from repro.runtime.elastic import mesh_invariant_rng, replace_state
 
 
 def main(argv=None):
@@ -46,6 +47,11 @@ def main(argv=None):
     ap.add_argument("--moment-dtype", default="float32")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+
+    # before ANY rng use: init must be a pure function of the key, not
+    # of the mesh it is jitted onto, or elastic restarts on a different
+    # topology silently fork the trajectory (see runtime/elastic.py)
+    mesh_invariant_rng()
 
     cfg = get_config(args.arch)
     if args.tiny:
@@ -73,7 +79,10 @@ def main(argv=None):
         start = 0
         if ckpt and args.resume and ckpt.latest_step() is not None:
             start = ckpt.latest_step()
-            state = ckpt.restore(state)
+            # elastic-safe restore: re-place params AND optimizer
+            # moments with THIS mesh's shardings (the checkpoint may
+            # come from a different topology)
+            state = replace_state(cfg, ckpt, state, mesh, step=start)
             print(f"resumed from step {start}")
 
         losses = []

@@ -174,7 +174,8 @@ def quantize_params(params, cfg: TDSConfig) -> dict:
 
 def forward_batched(params, cfg: TDSConfig, feats: jax.Array, state: dict,
                     use_int8: bool = False, kernels=None,
-                    prepared: Optional[dict] = None):
+                    prepared: Optional[dict] = None,
+                    axis: Optional[str] = None):
     """Slot-native TDS forward.  feats: (B, T, n_mfcc); state: the
     batched stream state ((B, k-1, w, c_in) per conv).  Returns
     (log_probs (B, T', V), new_state).
@@ -189,6 +190,15 @@ def forward_batched(params, cfg: TDSConfig, feats: jax.Array, state: dict,
     interpret/Mosaic.  `prepared` (from `quantize_params`) supplies
     pre-quantized int8 weights; without it the use_int8 path quantizes
     weights on the fly (offline/one-shot use).
+
+    `axis` names the shard_map mesh axis this forward runs under (the
+    serving engine's model-parallel step).  FC/head weights then arrive
+    as feature-axis shards — (K/n_model, N) per device — and the
+    contraction becomes a local partial matmul + psum over `axis`; the
+    B*T row fold, convs, and LayerNorms are untouched (replicated).
+    Activations stay replicated, so only the weight reads are split.
+    Weights left whole (non-divisible feature dim) are detected by
+    shape and contract locally, bit-identical to axis=None.
     """
     from repro.kernels import ops
 
@@ -203,11 +213,18 @@ def forward_batched(params, cfg: TDSConfig, feats: jax.Array, state: dict,
             if prepared is not None and name in prepared:
                 pq = prepared[name]
                 return ops.int8_matmul_prepared(xm, pq["wq"], pq["ws"],
-                                                policy=kernels,
-                                                hot=True) + p["b"]
+                                                policy=kernels, hot=True,
+                                                axis=axis) + p["b"]
             return ops.int8_matmul(xm, p["w"], policy=kernels,
                                    hot=True) + p["b"]
-        return xm @ p["w"] + p["b"]
+        wm = p["w"]
+        if axis is not None and wm.shape[0] != xm.shape[1]:
+            # model-parallel contraction: slice the activation columns
+            # matching this device's weight shard, contract locally,
+            # all-reduce the partial sums; bias added post-reduction
+            xloc = ops.shard_local_cols(xm, wm.shape[0], axis)
+            return jax.lax.psum(xloc @ wm, axis) + p["b"]
+        return xm @ wm + p["b"]
 
     for spec in specs:
         p = params[spec.name]
@@ -248,7 +265,8 @@ def forward_batched(params, cfg: TDSConfig, feats: jax.Array, state: dict,
 
 def forward(params, cfg: TDSConfig, feats: jax.Array,
             state: Optional[dict] = None, use_int8: bool = False,
-            kernels=None, prepared: Optional[dict] = None):
+            kernels=None, prepared: Optional[dict] = None,
+            axis: Optional[str] = None):
     """feats: (T, n_mfcc). Returns (log_probs (T', V), new_state).
 
     state=None => offline (zero left context).  T must be divisible by the
@@ -265,5 +283,5 @@ def forward(params, cfg: TDSConfig, feats: jax.Array,
     bst = jax.tree.map(lambda a: a[None], st_in)
     logp, ns = forward_batched(params, cfg, feats[None], bst,
                                use_int8=use_int8, kernels=kernels,
-                               prepared=prepared)
+                               prepared=prepared, axis=axis)
     return logp[0], jax.tree.map(lambda a: a[0], ns)

@@ -268,6 +268,53 @@ def param_shardings(cfg, param_shapes, mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# TDS serving: model-parallel weight shards (ASRPU pool-of-cores analogue)
+# ---------------------------------------------------------------------------
+def tds_param_specs(tds_cfg, mesh: Mesh) -> dict:
+    """PartitionSpec tree for a TDS params pytree under the serving
+    'model' axis: every FC/head weight matrix is split on its feature
+    (contraction) axis — each device holds K/n_model weight rows and
+    computes a partial sum, exactly ASRPU's pool-of-cores split where
+    each program computes one slice of a layer — while convs, LayerNorm
+    vectors, and biases stay replicated (they are KBs against the FCs'
+    MBs).  Weights whose feature dim does not divide the axis fall back
+    to replicated (same safety net as `_param_rule`)."""
+    from repro.models.tds import build_kernel_specs
+    nm = mesh.shape["model"]
+    out = {}
+    for s in build_kernel_specs(tds_cfg):
+        if s.kind == "layernorm":
+            out[s.name] = {"scale": P(), "bias": P()}
+        elif s.kind == "conv":
+            out[s.name] = {"w": P(), "b": P()}
+        else:  # fc / head
+            w = P("model", None) if s.n_in % nm == 0 else P()
+            out[s.name] = {"w": w, "b": P()}
+    return out
+
+
+def tds_prepared_specs(tds_cfg, mesh: Mesh) -> dict:
+    """PartitionSpec tree for `tds.quantize_params` output: the int8
+    payload `wq` shards exactly like its source `w` (feature axis); the
+    per-output-channel scales `ws` are replicated — activation
+    quantization runs on the full (replicated) rows, so the sharded int8
+    path sees the same scales as the unsharded one."""
+    from repro.models.tds import build_kernel_specs
+    nm = mesh.shape["model"]
+    return {s.name: {"wq": P("model", None) if s.n_in % nm == 0 else P(),
+                     "ws": P()}
+            for s in build_kernel_specs(tds_cfg)
+            if s.kind in ("fc", "head")}
+
+
+def place_tree(tree, spec_tree, mesh: Mesh):
+    """device_put every leaf with its NamedSharding(mesh, spec)."""
+    return jax.tree.map(
+        lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+        tree, spec_tree)
+
+
+# ---------------------------------------------------------------------------
 # batch / cache shardings
 # ---------------------------------------------------------------------------
 def batch_shardings(batch_shapes, mesh: Mesh):

@@ -58,14 +58,36 @@ def build_mesh(plan: RemeshPlan):
     return jax.make_mesh(plan.shape(), plan.axis_names())
 
 
+def mesh_invariant_rng() -> None:
+    """Elastic precondition: `jax.random` must produce the same LOGICAL
+    values whatever mesh a jitted init runs under.  jax's legacy
+    threefry lowering is sharding-dependent — `jax.jit(init,
+    out_shardings=...)` on a 4x2 mesh and on a 2x2 mesh produce
+    *different parameters from the same key* (observed ~0.5 max delta
+    on the danube tiny config), so a resumed job could never be
+    compared against — or reproduce — a straight run on the surviving
+    topology.  Partitionable threefry makes generation
+    placement-invariant (delta exactly 0).  Called by the training
+    launcher before any RNG use; restarts therefore re-derive identical
+    logical state regardless of the remesh plan."""
+    jax.config.update("jax_threefry_partitionable", True)
+
+
 def replace_state(cfg, checkpointer, state_template, mesh, step=None):
     """Restore a checkpoint INTO the new mesh's shardings (the elastic
-    restart path: topology changed, logical state identical)."""
+    restart path: topology changed, logical state identical).
+
+    Optimizer moments get their OWN sharding tree
+    (`launch.steps._opt_shardings_like`): moments inherit parameter
+    rules by path, which also covers int8 moment payloads
+    ({'q','scale'} leaves) — the old code re-used the raw param
+    shardings for 'm'/'v', which mis-places (and crashes on) quantized
+    moment trees after `plan_remesh` shrinks the data axis."""
+    if mesh is None:
+        return checkpointer.restore(state_template, step=step)
+    from repro.launch.steps import _opt_shardings_like
     p_sh = shlib.param_shardings(cfg, state_template["params"], mesh)
-    shardings = {"params": p_sh, "opt": None, "step": None}
-    return checkpointer.restore(state_template, step=step, shardings=None) \
-        if mesh is None else checkpointer.restore(
-            state_template, step=step,
-            shardings={"params": p_sh,
-                       "opt": {"m": p_sh, "v": p_sh, "count": None},
-                       "step": None})
+    o_sh = _opt_shardings_like(cfg, state_template["opt"], mesh)
+    return checkpointer.restore(
+        state_template, step=step,
+        shardings={"params": p_sh, "opt": o_sh, "step": None})

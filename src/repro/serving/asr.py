@@ -30,6 +30,26 @@ is bit-identical to stepping windows one at a time, but every TDS
 weight matrix is read once per multi-window step instead of once per
 80 ms window (the acoustic forward is weight-bandwidth-bound at B=1).
 
+Each step runs on a GATHERED sub-batch, not the full masked pool: the
+scheduler picks the window count w maximizing retired windows
+(w x eligible slots, largest w on ties), gathers exactly the eligible
+slots into the smallest covering slot bucket (powers of two up to
+n_slots), and scatters their new state back.  Skipped slots are simply
+never written — per-slot trajectories are untouched (the acoustic
+forward and the expansion are row-independent in the slot axis, pinned
+bitwise by tests).  The old full-pool masked step paid B=n_slots
+compute however few slots were eligible, which made the ragged tail of
+a utterance batch SLOWER than sequential decoding (a one-eligible-slot
+w=4 step cost ~4x its B=1 equivalent; see BENCH_decode.json's
+serve_asr_batched_b4 history).
+
+With `EngineConfig.mesh` set (a Mesh with a 'model' axis), the fused
+step runs under `shard_map`: FC/head weights live as feature-axis
+shards (`AsrProgram.prepare_params` places them), each device contracts
+its shard and psums partial products (`tds.forward_batched(axis=)`),
+and everything else — convs, LayerNorms, MFCC, hypothesis expansion —
+stays replicated.  mesh=None is the exact single-device path.
+
 Two API layers:
   * slot level — `feed_slot` / `pump` / `slot_best` / `reset_slot`:
     direct slot addressing for the deprecated ASRPU command shims
@@ -40,6 +60,7 @@ Two API layers:
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import List
 
 import jax
@@ -65,7 +86,6 @@ class AsrEngine(Engine):
         assert isinstance(config.program, AsrProgram), config.program
         super().__init__(config)
         self.program: AsrProgram = config.program
-        self.params = params
         self.plan = self.program.step_plan()
         fc = self.program.feat_cfg
         nfr = self.plan.feat_frames_per_step
@@ -76,59 +96,98 @@ class AsrEngine(Engine):
             (self._spp, self.plan.samples_per_step)
         assert features.frames_producible(self._need, fc) == nfr
         self._buckets = self.program.step_buckets()
+        self._slot_buckets = self._make_slot_buckets()
         # int8 weights are quantized exactly ONCE, here — the decoding
         # step then only quantizes activations (ops.int8_matmul_prepared)
-        self._prepared = self.program.prepare_params(params)
-        self._jit_step = jax.jit(self._masked_step_fn())
+        # — and, under a mesh, weights are PLACED as feature-axis shards
+        self.params, self._prepared = self.program.prepare_params(
+            params, config.mesh)
+        self._jit_step = self._build_step()
         self._jit_reset = jax.jit(self._reset_slot_fn())
         self._jit_best = jax.jit(self._slot_best_fn(final=False))
         self._jit_best_final = jax.jit(self._slot_best_fn(final=True))
         self._reset_pool()
 
     # ---- the fused decoding-step program -----------------------------
-    def _masked_step_fn(self):
-        """One slot-native decoding step, batched end to end: acoustic
-        scoring (the fused logmel MFCC tail + the TDS kernel sequence)
-        runs natively over the slot axis — every FC/head/LayerNorm sees
-        one (B*T, w*c)-row matmul and every conv tap one (B*T*w, c)-row
-        matmul, instead of the old `jax.vmap(acoustic)` of B tiny
-        per-slot ops — then each emitted acoustic frame runs ONE
-        natively batched hypothesis expansion (shared lexicon/LM gathers
-        over the flattened slot index set + the fused hypothesis unit).
-        Masked slots carry their state through unchanged."""
+    def _make_slot_buckets(self):
+        """Ascending sub-batch sizes a gathered step may run at (powers
+        of two, topped by n_slots) — one jit entry per (b, w) pair,
+        traced lazily, mirroring `AsrProgram.step_buckets`."""
+        out, b = [], 1
+        while b < self.n_slots:
+            out.append(b)
+            b *= 2
+        out.append(self.n_slots)
+        return tuple(sorted(set(out)))
+
+    def _step_fn(self):
+        """One slot-native decoding step over a GATHERED sub-batch:
+        acoustic scoring (the fused logmel MFCC tail + the TDS kernel
+        sequence) runs natively over the gathered slot axis — every
+        FC/head/LayerNorm sees one (b*T, w*c)-row matmul and every conv
+        tap one (b*T*w, c)-row matmul — then each emitted acoustic
+        frame runs ONE natively batched hypothesis expansion (shared
+        lexicon/LM gathers over the flattened slot index set + the
+        fused hypothesis unit).  Only the gathered slots are written
+        back; every other slot's carried state is untouched."""
         prog = self.program
         nfr = self.plan.feat_frames_per_step
         kernels = self.config.kernels
+        axis = "model" if self.config.mesh is not None else None
 
         def step(params, prepared, stream_state, beam_state, samples,
-                 active):
-            # samples: (B, w, samples_per_window) — w buffered 80 ms
-            # windows per slot, extracted window by window (each row is
-            # exactly the signal a w=1 step would see, so fusing windows
-            # is bit-identical to stepping them one at a time).  The
-            # (B, w) axes fold into the feature-frame axis, and from
-            # there into the row dimension of every TDS matmul.
-            B, w, _ = samples.shape
+                 slots):
+            # samples: (b, w, samples_per_window) — w buffered 80 ms
+            # windows for each of the b gathered slots, extracted window
+            # by window (each row is exactly the signal a w=1 step would
+            # see, so fusing windows is bit-identical to stepping them
+            # one at a time).  slots: (b,) int32 pool indices; bucket
+            # padding repeats a real slot, whose duplicate rows compute
+            # an identical update, so the scatter-back stays exact.
+            b, w, _ = samples.shape
+            ss = jax.tree.map(lambda a: a[slots], stream_state)
+            bs = jax.tree.map(lambda a: a[slots], beam_state)
             feats = features.mfcc(samples, prog.feat_cfg, use_pallas=True,
                                   kernels=kernels, hot=True)[:, :, :nfr]
-            feats = feats.reshape(B, w * nfr, -1)
+            feats = feats.reshape(b, w * nfr, -1)
             logp, new_ss = tds.forward_batched(
-                params, prog.tds_cfg, feats, stream_state,
-                use_int8=prog.use_int8, kernels=kernels, prepared=prepared)
+                params, prog.tds_cfg, feats, ss,
+                use_int8=prog.use_int8, kernels=kernels, prepared=prepared,
+                axis=axis)
 
-            def expand(bs, lp):            # lp: (B, V) — one frame, all slots
-                return dec.expand_step_batched(bs, lp, prog.lex, prog.lm,
+            def expand(bst, lp):           # lp: (b, V) — one frame, all slots
+                return dec.expand_step_batched(bst, lp, prog.lex, prog.lm,
                                                prog.dec_cfg, kernels), None
-            new_bs, _ = jax.lax.scan(expand, beam_state,
-                                     jnp.swapaxes(logp, 0, 1))
+            new_bs, _ = jax.lax.scan(expand, bs, jnp.swapaxes(logp, 0, 1))
 
-            def keep(new, old):
-                m = active.reshape((-1,) + (1,) * (new.ndim - 1))
-                return jnp.where(m, new, old)
-            return (jax.tree.map(keep, new_ss, stream_state),
-                    jax.tree.map(keep, new_bs, beam_state))
+            def put(full, new):
+                return full.at[slots].set(new)
+            return (jax.tree.map(put, stream_state, new_ss),
+                    jax.tree.map(put, beam_state, new_bs))
 
         return step
+
+    def _build_step(self):
+        """jit the fused step; with a mesh, wrap it in `shard_map` so
+        each device reads only its FC/head weight shard (psum-reduced
+        contractions inside `tds.forward_batched`) while slot state,
+        samples, and the expansion stay replicated."""
+        step = self._step_fn()
+        mesh = self.config.mesh
+        if mesh is None:
+            return jax.jit(step)
+        from jax.sharding import PartitionSpec as P
+
+        from repro import compat
+        from repro.parallel import sharding as shlib
+        pspecs = shlib.tds_param_specs(self.program.tds_cfg, mesh)
+        qspecs = (shlib.tds_prepared_specs(self.program.tds_cfg, mesh)
+                  if self._prepared is not None else P())
+        rep = P()
+        return jax.jit(compat.shard_map(
+            step, mesh=mesh,
+            in_specs=(pspecs, qspecs, rep, rep, rep, rep),
+            out_specs=(rep, rep), check_vma=False))
 
     def _reset_slot_fn(self):
         """One fused slot reset (utterance boundary): writing the fresh
@@ -163,6 +222,11 @@ class AsrEngine(Engine):
         self._slot_steps = np.zeros((self.n_slots,), np.int64)
         self._stream_state = None
         self._beam = None
+        # (n_active, slot bucket b, window bucket w) per fused step —
+        # scheduling introspection for tests and benchmarks; bounded so
+        # a long-lived streaming engine doesn't accumulate one tuple
+        # per 80 ms step forever
+        self.step_shapes: deque = deque(maxlen=4096)
 
     def _ensure_state(self) -> None:
         if self._stream_state is None:
@@ -213,33 +277,40 @@ class AsrEngine(Engine):
         return self.slot_windows(slot) >= 1
 
     def _step(self) -> bool:
-        """One fused decoding step advancing every slot with enough
-        buffered windows; masked slots carry state through unchanged.
-        The step takes `w` windows at once — the largest step bucket any
-        slot can fill (bulk decoding amortizes weight reads + dispatch
-        over w windows; live streaming naturally runs w=1).  Slots with
-        fewer than w windows wait for a later, smaller-w pump round.
-        False (and nothing runs) when no slot can produce output — all
-        setup threads returned zero."""
+        """One fused decoding step over a gathered sub-batch.  The
+        scheduler picks the step bucket `w` retiring the most buffered
+        windows in one dispatch — w x (slots holding >= w windows),
+        largest w on ties (bulk decoding amortizes weight reads; live
+        streaming naturally runs w=1) — then gathers exactly the
+        eligible slots into the smallest covering slot bucket.  Slots
+        with fewer than w windows wait for a later, smaller-w pump
+        round and are NOT stepped (no masked full-pool compute: a
+        ragged tail of draining utterances steps at b=1/2, not
+        b=n_slots).  False (and nothing runs) when no slot can produce
+        output — all setup threads returned zero."""
         avail = np.array([self.slot_windows(s)
                           for s in range(self.n_slots)])
         if not (avail >= 1).any():
             return False
-        w = next(b for b in self._buckets if b <= avail.max())
-        active = avail >= w
+        w = max((b for b in self._buckets if (avail >= b).any()),
+                key=lambda b: (b * int((avail >= b).sum()), b))
+        slots = [s for s in range(self.n_slots) if avail[s] >= w]
         self._ensure_state()
-        batch = np.zeros((self.n_slots, w, self._need), np.float32)
-        for s in range(self.n_slots):
-            if active[s]:
-                for i in range(w):
-                    off = i * self._spp
-                    batch[s, i] = self._slot_bufs[s][off:off + self._need]
-                self._slot_bufs[s] = self._slot_bufs[s][w * self._spp:]
+        b = next(x for x in self._slot_buckets if x >= len(slots))
+        batch = np.zeros((b, w, self._need), np.float32)
+        for j, s in enumerate(slots):
+            for i in range(w):
+                off = i * self._spp
+                batch[j, i] = self._slot_bufs[s][off:off + self._need]
+            self._slot_bufs[s] = self._slot_bufs[s][w * self._spp:]
+        batch[len(slots):] = batch[0]      # bucket padding: duplicate rows
+        idx = np.array(slots + slots[:1] * (b - len(slots)), np.int32)
         self._stream_state, self._beam = self._jit_step(
             self.params, self._prepared, self._stream_state, self._beam,
-            jnp.asarray(batch), jnp.asarray(active))
-        self._slot_steps += active * w
+            jnp.asarray(batch), jnp.asarray(idx))
+        self._slot_steps[slots] += w
         self.n_steps += 1
+        self.step_shapes.append((len(slots), b, w))
         return True
 
     def pump(self) -> int:

@@ -12,7 +12,9 @@ mutates its program — reconfiguration means building a new engine.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Tuple, Union
+from typing import Optional, Tuple, Union
+
+from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
 from repro.configs.tds_asr import (DECODER_CONFIG, FEATURE_CONFIG,
@@ -56,16 +58,35 @@ class AsrProgram:
         return make_step_plan(self.tds_cfg, self.feat_cfg, self.step_ms,
                               self.dec_cfg.beam_size)
 
-    def prepare_params(self, params):
-        """Build-time weight preparation for the decoding step: when the
-        program runs int8 acoustic scoring, quantize every FC/head
-        weight matrix ONCE (`tds.quantize_params`) so the hot path only
-        quantizes activations.  Returns None for the fp32 program — the
-        engine passes the result straight into `tds.forward_batched`."""
-        if not self.use_int8:
-            return None
-        from repro.models import tds
-        return tds.quantize_params(params, self.tds_cfg)
+    def prepare_params(self, params, mesh=None):
+        """Build-time weight preparation for the decoding step, returning
+        `(params, prepared)`:
+
+          * int8 programs quantize every FC/head weight matrix ONCE
+            (`tds.quantize_params`) into `prepared` so the hot path only
+            quantizes activations; fp32 programs get `prepared=None`.
+          * with a `mesh` (the engine's model-parallel spec), both trees
+            are PLACED with `param_shardings`-style NamedShardings —
+            FC/head matmuls (and their int8 `wq` payloads) split on the
+            feature axis over the 'model' mesh axis, everything else
+            replicated — so each device of the sharded engine step holds
+            only its weight shard (`parallel.sharding.tds_param_specs`).
+
+        The engine passes both results straight into
+        `tds.forward_batched`."""
+        prepared = None
+        if self.use_int8:
+            from repro.models import tds
+            prepared = tds.quantize_params(params, self.tds_cfg)
+        if mesh is not None:
+            from repro.parallel import sharding as shlib
+            params = shlib.place_tree(
+                params, shlib.tds_param_specs(self.tds_cfg, mesh), mesh)
+            if prepared is not None:
+                prepared = shlib.place_tree(
+                    prepared, shlib.tds_prepared_specs(self.tds_cfg, mesh),
+                    mesh)
+        return params, prepared
 
     def with_beam_width(self, beam: float) -> "AsrProgram":
         """ConfigureBeamWidth as a pure derivation, not a mutation."""
@@ -136,14 +157,26 @@ class EngineConfig:
     `kernels` selects how Pallas-backed decode ops execute (ref /
     interpret / Mosaic, resolved per backend by default) — it replaced
     the old per-call `use_pallas_prune` bool threaded through the
-    decoder; see repro.kernels.policy.KernelPolicy."""
+    decoder; see repro.kernels.policy.KernelPolicy.
+
+    `mesh` is the model-parallel spec: a `jax.sharding.Mesh` with a
+    'model' axis.  The ASR engine then places FC/head weights as
+    feature-axis shards and runs its fused step under `shard_map`, so
+    each device reads only its weight shard (the B=1 fp32 step is bound
+    by the per-window FC weight traffic; see ROADMAP).  None (the
+    default) keeps the exact single-device step — not a 1-device mesh,
+    the same unsharded jit as before."""
     program: Program
     n_slots: int = 1
     kernels: KernelPolicy = field(default_factory=KernelPolicy)
+    mesh: Optional[Mesh] = None
 
     def __post_init__(self):
         if self.n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+        if self.mesh is not None and "model" not in self.mesh.axis_names:
+            raise ValueError(
+                f"serving mesh needs a 'model' axis, got {self.mesh}")
 
 
 def make_engine(config: EngineConfig, params):

@@ -18,7 +18,12 @@ down.
 
 Subclasses implement the slot mechanics:
   _admit_to_slot(session, slot)  load a queued session's pending input
-  _step() -> bool                one fused step; False = nothing to do
+  _step() -> bool                one fused step; False = nothing to do.
+                                 Which slots it advances (all of them,
+                                 a gathered sub-batch, ...) is the
+                                 subclass's scheduling policy — the
+                                 only contract is that per-slot
+                                 trajectories are schedule-independent
   _ready_to_close(session, slot) session's slot work is exhausted
   _finalize_slot(slot) -> dict   result payload for a closing session
   _poll_active(session) -> dict  live (non-final) output for a session

@@ -40,6 +40,11 @@ from repro.serving.engine import Engine, Session
 class LmEngine(Engine):
     def __init__(self, config: EngineConfig, params):
         assert isinstance(config.program, LmProgram), config.program
+        if config.mesh is not None:
+            raise NotImplementedError(
+                "EngineConfig.mesh (model-parallel serving) is wired for "
+                "the ASR engine; LM serving shards through launch/steps.py "
+                "build_cell instead")
         super().__init__(config)
         self.program: LmProgram = config.program
         self.lm = LM(self.program.model_cfg)
