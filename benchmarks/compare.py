@@ -1,9 +1,11 @@
 """Diff a fresh benchmark JSON against a committed baseline.
 
-Non-gating perf-regression annotator for the CI bench-smoke job:
+Non-gating perf-regression annotator for the CI bench-smoke and
+load-smoke jobs:
 
   python -m benchmarks.compare BENCH_decode.json bench_fresh.json \\
       --threshold 1.3
+  python -m benchmarks.compare --load BENCH_load.json load_fresh.json
 
 prints one line per row present in BOTH files and emits a GitHub
 `::warning::` annotation for every row whose fresh time exceeds
@@ -11,9 +13,15 @@ threshold x baseline.  `*_pre_refactor` trajectory keys are skipped;
 baseline rows ABSENT from the fresh run also get a `::warning::` — a
 renamed or dropped bench row would otherwise silently exit regression
 coverage.  (Fresh-only rows are fine: they are new benches the baseline
-will pick up when re-committed.)  Always exits 0 — bench hosts are
-noisy shared runners, so regressions annotate the run instead of
-failing it.
+will pick up when re-committed.)
+
+``--load BASE FRESH`` compares a benchmarks/load.py latency report
+instead: only ``*_ms`` rows are diffed and only ``*_p95_*`` rows can
+annotate (p50 is too schedule-sensitive and p99 too tail-noisy on
+shared runners to gate on; they still print for the trajectory).
+
+Always exits 0 — bench hosts are noisy shared runners, so regressions
+annotate the run instead of failing it.
 """
 from __future__ import annotations
 
@@ -38,6 +46,24 @@ def compare(base: dict, fresh: dict, threshold: float) -> list:
     return regressed
 
 
+def compare_load(base: dict, fresh: dict, threshold: float) -> list:
+    """Latency-row diff for benchmarks/load.py reports: `*_ms` rows
+    only, with `*_p95_*` rows carrying the regression annotations."""
+    regressed = []
+    for name in sorted(set(base) & set(fresh)):
+        if not name.endswith("_ms"):
+            continue
+        b, f = float(base[name]), float(fresh[name])
+        if b <= 0.0:
+            continue
+        ratio = f / b
+        flag = " REGRESSED" if "_p95_" in name and ratio > threshold else ""
+        print(f"{name}: {b:.2f} -> {f:.2f} ms ({ratio:.2f}x){flag}")
+        if flag:
+            regressed.append((name, b, f, ratio))
+    return regressed
+
+
 def missing_rows(base: dict, fresh: dict) -> list:
     """Baseline rows the fresh run no longer measures (renamed/dropped
     benches silently leave regression coverage without this check)."""
@@ -47,24 +73,42 @@ def missing_rows(base: dict, fresh: dict) -> list:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("base", help="committed baseline JSON (BENCH_decode.json)")
-    ap.add_argument("fresh", help="freshly measured JSON")
+    ap.add_argument("base", nargs="?",
+                    help="committed baseline JSON (BENCH_decode.json)")
+    ap.add_argument("fresh", nargs="?", help="freshly measured JSON")
     ap.add_argument("--threshold", type=float, default=1.3,
                     help="annotate rows slower than threshold x baseline")
+    ap.add_argument("--load", nargs=2, metavar=("BASE", "FRESH"),
+                    default=None,
+                    help="compare benchmarks/load.py latency reports "
+                         "instead (only *_ms rows; only *_p95_* rows "
+                         "annotate)")
     args = ap.parse_args(argv)
+    if args.load is not None:
+        base_path, fresh_path = args.load
+        unit, diff = "ms", compare_load
+    elif args.base and args.fresh:
+        base_path, fresh_path = args.base, args.fresh
+        unit, diff = "us", compare
+    else:
+        ap.error("need BASE FRESH positionals or --load BASE FRESH")
 
-    base = json.loads(pathlib.Path(args.base).read_text())
-    fresh = json.loads(pathlib.Path(args.fresh).read_text())
-    regressed = compare(base, fresh, args.threshold)
-    for name in missing_rows(base, fresh):
-        print(f"::warning file={args.base}::baseline row {name} is "
-              f"missing from the fresh run — renamed or dropped rows "
-              f"silently leave perf-regression coverage; re-measure it "
-              f"or update {args.base}")
+    base = json.loads(pathlib.Path(base_path).read_text())
+    fresh = json.loads(pathlib.Path(fresh_path).read_text())
+    regressed = diff(base, fresh, args.threshold)
+    # load-mode fresh runs are usually a smoke subset of the committed
+    # groups (16 streams in CI vs the 100-stream committed report), so
+    # the absent-row check only applies to the decode comparison
+    if args.load is None:
+        for name in missing_rows(base, fresh):
+            print(f"::warning file={base_path}::baseline row {name} is "
+                  f"missing from the fresh run — renamed or dropped rows "
+                  f"silently leave perf-regression coverage; re-measure "
+                  f"it or update {base_path}")
     if regressed:
         for name, b, f, ratio in regressed:
-            print(f"::warning file={args.base}::{name} regressed "
-                  f"{ratio:.2f}x ({b:.0f} -> {f:.0f} us, "
+            print(f"::warning file={base_path}::{name} regressed "
+                  f"{ratio:.2f}x ({b:.0f} -> {f:.0f} {unit}, "
                   f"threshold {args.threshold}x)")
         print(f"{len(regressed)} row(s) regressed (non-gating)")
     else:

@@ -100,10 +100,13 @@ class ASRPU:
         # max_windows_per_step=1: the paper's DecodingStep command is
         # one 80 ms window per execution, and callers observe _n_steps —
         # bulk multi-window fusion is an engine-API behavior only.
+        # flush_tail=False: the paper's command API has no end-of-input
+        # signal (DecodingStep/best only ever decode whole windows), so
+        # the engine-level trailing-window flush must not fire here.
         return AsrProgram(self._tds_cfg, self._lex, self._lm,
                           self._feat_cfg, self._dec_cfg,
                           use_int8=self._use_int8, step_ms=self._step_ms,
-                          max_windows_per_step=1)
+                          max_windows_per_step=1, flush_tail=False)
 
     def _require_engine(self) -> AsrEngine:
         assert self._tds_cfg is not None and self._lex is not None, \

@@ -112,16 +112,17 @@ def asr_demo_system():
 
 
 def asr_demo_engine(n_slots: int, kernels: KernelPolicy = None,
-                    mesh=None) -> tuple:
+                    mesh=None, max_queue=None) -> tuple:
     """(engine, words): an AsrEngine over the demo system's program.
     `mesh` (see `serve_mesh`) shards the TDS FC/head weights over its
-    'model' axis and runs the fused step under shard_map."""
+    'model' axis and runs the fused step under shard_map; `max_queue`
+    is the admission backpressure bound (`EngineConfig.max_queue`)."""
     tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
     program = AsrProgram(tds_cfg, lex, lm, dec_cfg=dec_cfg,
                         ).with_beam_width(25.0)
     engine = AsrEngine(EngineConfig(program, n_slots=n_slots,
                                     kernels=kernels or KernelPolicy(),
-                                    mesh=mesh),
+                                    mesh=mesh, max_queue=max_queue),
                        params)
     return engine, words
 
@@ -182,6 +183,47 @@ def serve_asr_multistream(args):
     return results
 
 
+def serve_network(args):
+    """`--serve`: bind the asyncio network front-end over the demo
+    engines (ASR always; plus a tiny LM engine) and serve until
+    interrupted.  Each engine's step loop runs on its own EngineWorker
+    thread, so sessions stream over HTTP chunked transfer while the
+    fused steps batch across them (see repro.serving.server)."""
+    import asyncio
+
+    from repro.serving.server import EngineServer
+
+    asr_engine, _ = asr_demo_engine(args.streams, _policy(args),
+                                    serve_mesh(args.mesh),
+                                    max_queue=args.max_queue)
+    lm_cfg = get_config(args.arch).tiny()
+    lm = build_lm(lm_cfg, None)
+    lm_program = LmProgram(lm_cfg, cache_len=args.prompt_len + args.max_new,
+                           max_new=args.max_new)
+    lm_engine = LmEngine(
+        EngineConfig(lm_program, n_slots=args.slots, kernels=_policy(args),
+                     max_queue=args.max_queue),
+        lm.init(jax.random.PRNGKey(0)))
+
+    async def run():
+        server = EngineServer(asr_engine=asr_engine, lm_engine=lm_engine,
+                              host=args.host, port=args.port)
+        await server.start()
+        print(f"serving ASR ({args.streams} slots) + LM ({args.slots} "
+              f"slots) on http://{server.host}:{server.port} "
+              f"(max_queue={args.max_queue}); POST /asr, POST /lm, "
+              f"GET /metrics")
+        try:
+            await server.serve_forever()
+        finally:
+            await server.aclose()
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="asr", choices=["lm", "asr"])
@@ -208,7 +250,20 @@ def main(argv=None):
                          "1 = the unsharded single-device step (on CPU "
                          "hosts set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N first)")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the asyncio network front-end (HTTP "
+                         "chunked streaming over the demo ASR + LM "
+                         "engines) instead of the in-process demos")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8300,
+                    help="--serve listen port (0 picks a free port)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission backpressure bound: with every slot "
+                         "busy and this many sessions queued, new "
+                         "sessions get HTTP 503 (default: unbounded)")
     args = ap.parse_args(argv)
+    if args.serve:
+        return serve_network(args)
     if args.mode == "lm":
         if args.mesh > 1:
             ap.error("--mesh is ASR-only (LmEngine rejects a mesh; "

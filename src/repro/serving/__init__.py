@@ -8,16 +8,29 @@ Three public layers (see ROADMAP.md "Serving architecture"):
   * `EngineConfig` — frozen declarative spec (`AsrProgram`/`LmProgram`)
                      replacing the mutable configure_* command sequence.
 
+The network front-end (`EngineServer` in repro.serving.server) exposes
+engines over asyncio HTTP chunked streaming, with each engine's step
+loop on its own `EngineWorker` thread; `EngineConfig.max_queue` turns
+overload into typed `AdmissionRejected` backpressure (HTTP 503), and
+`Engine.metrics` (an `EngineMetrics`) tracks first-result / finalize
+latency, queue depth, and step-shape occupancy.
+
 The deprecated command-API shims (`ASRPU`, `MultiStreamASRPU` in
 repro.core.scheduler) are thin wrappers over `AsrEngine`.
 """
 from repro.serving.asr import AsrEngine
 from repro.serving.config import (AsrProgram, EngineConfig, LmProgram,
                                   Program, make_engine)
-from repro.serving.engine import Engine, Session
+from repro.serving.engine import (AdmissionRejected, Engine, Session,
+                                  copy_result)
 from repro.serving.lm import LmEngine
+from repro.serving.metrics import EngineMetrics
+from repro.serving.server import (AsrClient, EngineServer, ServerRejected,
+                                  fetch_metrics, lm_generate)
 
 __all__ = [
-    "AsrEngine", "AsrProgram", "Engine", "EngineConfig", "LmEngine",
-    "LmProgram", "Program", "Session", "make_engine",
+    "AdmissionRejected", "AsrClient", "AsrEngine", "AsrProgram", "Engine",
+    "EngineConfig", "EngineMetrics", "EngineServer", "LmEngine",
+    "LmProgram", "Program", "ServerRejected", "Session", "copy_result",
+    "fetch_metrics", "lm_generate", "make_engine",
 ]

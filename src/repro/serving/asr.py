@@ -71,7 +71,7 @@ from repro.core import decoder as dec
 from repro.core import features
 from repro.models import tds
 from repro.serving.config import AsrProgram, EngineConfig
-from repro.serving.engine import Engine, Session
+from repro.serving.engine import Engine, Session, copy_result
 
 
 def empty_hypothesis() -> dict:
@@ -92,6 +92,9 @@ class AsrEngine(Engine):
         # samples retired per step / needed buffered for a full window
         self._spp = features.consumed_samples(nfr, fc)
         self._need = fc.frame_len + (nfr - 1) * fc.frame_shift
+        # samples a step retains for MFCC framing overlap: buffered
+        # samples beyond this were never covered by a decoded frame
+        self._overlap = self._need - self._spp
         assert self._spp == self.plan.samples_per_step, \
             (self._spp, self.plan.samples_per_step)
         assert features.frames_producible(self._need, fc) == nfr
@@ -288,6 +291,7 @@ class AsrEngine(Engine):
         ragged tail of draining utterances steps at b=1/2, not
         b=n_slots).  False (and nothing runs) when no slot can produce
         output — all setup threads returned zero."""
+        self._flush_finished_tails()
         avail = np.array([self.slot_windows(s)
                           for s in range(self.n_slots)])
         if not (avail >= 1).any():
@@ -311,7 +315,33 @@ class AsrEngine(Engine):
         self._slot_steps[slots] += w
         self.n_steps += 1
         self.step_shapes.append((len(slots), b, w))
+        self.metrics.on_step(len(slots), b)
+        for s in slots:
+            if self._owner[s] is not None:      # slot-level API has no owner
+                self.metrics.on_first_result(self._owner[s])
         return True
+
+    def _flush_finished_tails(self) -> None:
+        """Zero-pad the trailing partial window of finished slots so the
+        next fused step decodes it.  Without this, `_ready_to_close`
+        dropped up to ~step_ms of tail samples (often the end of the
+        last word) the moment no FULL window was buffered.  Only slots
+        whose buffer holds samples never covered by a decoded frame
+        (more than the retained framing overlap) are padded; padding to
+        exactly one full window leaves the pure overlap after that step,
+        so a flush runs at most once per session and utterances ending
+        on a window boundary are untouched (bit-identical to the
+        unflushed path)."""
+        if not self.program.flush_tail:
+            return
+        for slot, sess in enumerate(self._owner):
+            if sess is None or not sess.finished:
+                continue
+            n = self._slot_bufs[slot].shape[0]
+            if n > self._overlap and not self.slot_can_step(slot):
+                self._slot_bufs[slot] = np.concatenate(
+                    [self._slot_bufs[slot],
+                     np.zeros((self._need - n,), np.float32)])
 
     def pump(self) -> int:
         """Run decoding steps until no slot has a full window left."""
@@ -342,7 +372,7 @@ class AsrEngine(Engine):
     def _poll(self, session: Session) -> dict:
         self._advance()
         if session.done:
-            return dict(session.result)
+            return copy_result(session.result)
         if session.admitted:
             res = self.slot_best(session.slot)
             res["steps"] = int(self._slot_steps[session.slot])
@@ -358,7 +388,12 @@ class AsrEngine(Engine):
             self.feed_slot(slot, session._pending)
 
     def _ready_to_close(self, session: Session, slot: int) -> bool:
-        return session.finished and not self.slot_can_step(slot)
+        if not (session.finished and not self.slot_can_step(slot)):
+            return False
+        # not closeable while a tail flush is pending: samples beyond
+        # the framing overlap still await their zero-padded final step
+        return (not self.program.flush_tail
+                or self._slot_bufs[slot].shape[0] <= self._overlap)
 
     def _finalize_slot(self, slot: int) -> dict:
         self._ensure_state()   # finish() before any step still finalizes
@@ -378,4 +413,4 @@ class AsrEngine(Engine):
         for sess in sessions:      # so admitted slots step batched below
             sess.finish()
         assert all(sess.done for sess in sessions), sessions
-        return [dict(sess.result) for sess in sessions]
+        return [copy_result(sess.result) for sess in sessions]

@@ -43,6 +43,15 @@ class AsrProgram:
     # each FC weight matrix once per multi-window step instead of once
     # per 80 ms window.  1 disables fusion.
     max_windows_per_step: int = 4
+    # On finish(), a session whose buffer still holds samples no decoded
+    # frame has covered (more than the frame_len - frame_shift overlap a
+    # step retains) gets that trailing partial window zero-padded and
+    # decoded by one last step before finalize — without it, up to
+    # ~step_ms of tail audio (often the end of the last word) is
+    # silently dropped.  The deprecated ASRPU command shims disable it:
+    # the paper's DecodingStep/best commands have no end-of-input signal
+    # and only ever decode whole windows.
+    flush_tail: bool = True
 
     def step_buckets(self) -> Tuple[int, ...]:
         """Descending window counts a fused step may take (one jit entry
@@ -165,15 +174,26 @@ class EngineConfig:
     each device reads only its weight shard (the B=1 fp32 step is bound
     by the per-window FC weight traffic; see ROADMAP).  None (the
     default) keeps the exact single-device step — not a 1-device mesh,
-    the same unsharded jit as before."""
+    the same unsharded jit as before.
+
+    `max_queue` is the admission backpressure bound: with every slot
+    busy and this many sessions already queued, `Engine.open()` raises
+    `AdmissionRejected` (a typed error the network front-end maps to
+    503) instead of queueing unboundedly.  None (default) keeps the
+    unbounded in-process behavior; 0 means "never queue — reject unless
+    a slot is free"."""
     program: Program
     n_slots: int = 1
     kernels: KernelPolicy = field(default_factory=KernelPolicy)
     mesh: Optional[Mesh] = None
+    max_queue: Optional[int] = None
 
     def __post_init__(self):
         if self.n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+        if self.max_queue is not None and self.max_queue < 0:
+            raise ValueError(
+                f"max_queue must be None or >= 0, got {self.max_queue}")
         if self.mesh is not None and "model" not in self.mesh.axis_names:
             raise ValueError(
                 f"serving mesh needs a 'model' axis, got {self.mesh}")

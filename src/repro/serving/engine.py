@@ -30,8 +30,68 @@ Subclasses implement the slot mechanics:
 """
 from __future__ import annotations
 
-from collections import deque
-from typing import List, Optional
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.serving.metrics import EngineMetrics
+
+
+class AdmissionRejected(RuntimeError):
+    """Typed backpressure error: the engine's admission queue is at
+    `EngineConfig.max_queue` and no slot is free, so `open()` refuses
+    the session instead of queueing it unboundedly.  Carries the depth
+    observed and the configured bound so callers (e.g. the network
+    front-end's 503 response) can report both."""
+
+    def __init__(self, queue_depth: int, max_queue: int):
+        super().__init__(
+            f"admission rejected: queue depth {queue_depth} at "
+            f"max_queue={max_queue} with every slot busy")
+        self.queue_depth = queue_depth
+        self.max_queue = max_queue
+
+
+class SessionQueue:
+    """Order-preserving admission queue with O(1) removal.
+
+    `deque.remove(sess)` is O(position) — draining hundreds of queued
+    sessions (the load-generator regime) went quadratic whenever the
+    removed session was not at the head (LM sessions waiting on a
+    prompt, the finished-but-unadmittable harvest path).  A dict keyed
+    by the session handles preserves insertion order (guaranteed since
+    Python 3.7) and deletes in O(1)."""
+
+    def __init__(self):
+        self._d: dict = {}
+
+    def append(self, session) -> None:
+        self._d[session] = None
+
+    def remove(self, session) -> None:
+        del self._d[session]
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def __iter__(self) -> Iterator:
+        return iter(self._d)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, session) -> bool:
+        return session in self._d
+
+
+def copy_result(res: dict) -> dict:
+    """Defensive copy of a result payload.  The engine keeps the stored
+    result for later polls; handing out the stored numpy arrays (or the
+    LM token list) would let a caller's in-place mutation corrupt every
+    subsequent poll of the same session."""
+    return {k: v.copy() if isinstance(v, np.ndarray)
+            else list(v) if isinstance(v, list) else v
+            for k, v in res.items()}
 
 
 class Session:
@@ -51,6 +111,9 @@ class Session:
         self.detached = False          # engine was reset under the session
         self.result: Optional[dict] = None
         self._pending = None           # mode-specific input awaiting a slot
+        # metric timestamps, stamped by engine.metrics (see metrics.py)
+        self._t_open = self._t_admit = None
+        self._t_first = self._t_finish = None
 
     @property
     def admitted(self) -> bool:
@@ -78,14 +141,19 @@ class Session:
         self._check_attached()
         return self._engine._poll(self)
 
-    def finish(self) -> Optional[dict]:
+    def finish(self, wait: bool = True) -> Optional[dict]:
         """End-of-input: flush, finalize, free the slot.  Returns the
         final result, or None if the session is still queued behind
-        unfinished sessions (poll() later to collect it)."""
+        unfinished sessions (poll() later to collect it).  wait=False
+        only marks end-of-input without driving the engine — the
+        network front-end uses it so its dedicated engine thread keeps
+        sole ownership of the step loop."""
         self._check_attached()
         self.finished = True
-        self._engine._advance()
-        return self.result
+        self._engine.metrics.on_finish(self)
+        if wait:
+            self._engine._advance()
+        return None if self.result is None else copy_result(self.result)
 
     def __repr__(self):
         state = ("done" if self.done else
@@ -100,17 +168,29 @@ class Engine:
     def __init__(self, config):
         self.config = config
         self.n_slots: int = config.n_slots
+        self.max_queue: Optional[int] = getattr(config, "max_queue", None)
         self.n_steps = 0               # fused steps taken since reset
-        self._queue: deque = deque()
+        self._queue = SessionQueue()
         self._owner: List[Optional[Session]] = [None] * self.n_slots
         self._next_sid = 0
+        self.metrics = EngineMetrics()
 
     # ---- session front-end -------------------------------------------
     def open(self) -> Session:
-        """Open a connection; the session queues for a slot immediately."""
+        """Open a connection; the session queues for a slot immediately.
+        With `EngineConfig.max_queue` set, a full queue while every slot
+        is busy raises `AdmissionRejected` (typed backpressure) instead
+        of queueing unboundedly."""
+        if (self.max_queue is not None
+                and len(self._queue) >= self.max_queue
+                and all(o is not None for o in self._owner)):
+            self.metrics.on_reject()
+            raise AdmissionRejected(len(self._queue), self.max_queue)
         s = Session(self, self._next_sid)
         self._next_sid += 1
         self._queue.append(s)
+        self.metrics.on_open(s)
+        self.metrics.sample_queue_depth(len(self._queue))
         self._admit()
         return s
 
@@ -142,7 +222,10 @@ class Engine:
                 sess.slot = slot
                 self._admit_to_slot(sess, slot)
                 sess._pending = None
+                self.metrics.on_admit(sess)
                 did = True
+        if did:
+            self.metrics.sample_queue_depth(len(self._queue))
         return did
 
     def _harvest(self) -> bool:
@@ -152,6 +235,7 @@ class Engine:
                 sess.result = self._finalize_slot(slot)
                 sess.slot = None
                 self._owner[slot] = None
+                self.metrics.on_done(sess)
                 did = True
         # finished sessions that can never be admitted (e.g. an LM
         # session with no prompt) close from the queue with an empty
@@ -160,7 +244,10 @@ class Engine:
                      if s.finished and not self._admittable(s)]:
             sess.result = self._empty_result()
             self._queue.remove(sess)
+            self.metrics.on_done(sess)
             did = True
+        if did:
+            self.metrics.sample_queue_depth(len(self._queue))
         return did
 
     def reset(self) -> None:

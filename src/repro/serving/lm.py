@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.models import LM
 from repro.serving.config import EngineConfig, LmProgram
-from repro.serving.engine import Engine, Session
+from repro.serving.engine import Engine, Session, copy_result
 
 
 class LmEngine(Engine):
@@ -92,7 +92,7 @@ class LmEngine(Engine):
     def _poll(self, session: Session) -> dict:
         self._advance()
         if session.done:
-            return dict(session.result)
+            return copy_result(session.result)
         # _advance runs admitted generation to completion and drains the
         # queue through freed slots, so the only session left un-done is
         # one whose prompt has not been pushed yet
@@ -128,6 +128,8 @@ class LmEngine(Engine):
             self._prefill_group(b, group)
         for sess in ready:
             sess._pending = None
+            self.metrics.on_admit(sess)
+        self.metrics.sample_queue_depth(len(self._queue))
         return True
 
     def _admit_to_slot(self, session: Session, slot: int) -> None:
@@ -170,6 +172,9 @@ class LmEngine(Engine):
         for i, (sess, slot) in enumerate(group):
             self._gen[slot] = [int(firsts[i])]
             self._rem[slot] = self.program.max_new - 1
+            self.metrics.on_first_result(sess)
+        # the padded prefill batch is one dispatch of n_slots rows
+        self.metrics.on_step(len(group), self.n_slots)
 
     def _step(self) -> bool:
         live = [s for s in range(self.n_slots)
@@ -180,6 +185,7 @@ class LmEngine(Engine):
                                               {"tokens": self._tokens})
         self._tokens = tok[:, None]
         self.n_steps += 1
+        self.metrics.on_step(len(live), self.n_slots)
         for s in live:
             self._gen[s].append(int(tok[s]))
             self._rem[s] -= 1

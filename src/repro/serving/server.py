@@ -1,0 +1,549 @@
+"""Network serving front-end: asyncio server over the engine slot pools.
+
+One `EngineServer` exposes an `AsrEngine` and/or `LmEngine` over plain
+HTTP/1.1 on an asyncio event loop — no third-party web framework, just
+`asyncio.start_server` plus hand-rolled chunked transfer encoding (both
+ends of the protocol live in this module, so the wire format only has
+to be self-consistent).
+
+Threading contract: the event loop NEVER touches an engine.  Each
+engine is owned by one `EngineWorker` — a dedicated daemon thread that
+executes submitted commands (open/push/finish/readout) between pump
+iterations of the engine's admit -> step -> harvest loop.  Network I/O
+therefore never blocks a fused decoding step and a slow fused step
+never stalls accepting connections; the asyncio side bridges with
+`asyncio.wrap_future` over `concurrent.futures.Future`s.
+
+Wire protocol:
+
+  * ``POST /asr`` with chunked request body — one streaming session.
+    Each request chunk is a JSON command (``{"op": "push", "audio":
+    [...]}``, ``{"op": "poll"}``, ``{"op": "finish"}``) and each
+    response chunk is the JSON reply to the command in order (poll ->
+    current best hypothesis; finish -> the final result).  The response
+    status line is sent as soon as the session is admitted or queued,
+    so rejection is visible before any audio is shipped.
+  * ``POST /lm`` with a JSON body ``{"prompt": [...]}`` — one batched
+    generation request; responds with the final token payload.
+  * ``GET /metrics`` — JSON `EngineMetrics.snapshot()` per engine.
+  * Admission backpressure (`AdmissionRejected`, i.e. the engine queue
+    is at `EngineConfig.max_queue` with every slot busy) maps to a
+    ``503`` JSON response carrying the observed depth and the bound;
+    the client helpers raise it as `ServerRejected`.
+
+Client helpers (`AsrClient`, `lm_generate`, `fetch_metrics`) speak the
+same protocol and are what tests/test_serving_server.py and
+benchmarks/load.py drive.
+"""
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import json
+import queue
+import threading
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.engine import AdmissionRejected, Engine, copy_result
+
+
+# ---- JSON payloads ----------------------------------------------------
+
+def jsonable(x):
+    """Result payloads carry numpy arrays/scalars; the wire carries
+    JSON.  Both ends are Python's json module, so non-finite floats
+    (-inf hypothesis scores) survive as ``-Infinity`` literals."""
+    if isinstance(x, dict):
+        return {k: jsonable(v) for k, v in x.items()}
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if isinstance(x, np.generic):
+        return x.item()
+    if isinstance(x, (list, tuple)):
+        return [jsonable(v) for v in x]
+    return x
+
+
+# ---- chunked-transfer framing ----------------------------------------
+
+async def _write_chunk(writer: asyncio.StreamWriter, data: bytes) -> None:
+    writer.write(b"%x\r\n" % len(data) + data + b"\r\n")
+    await writer.drain()
+
+
+async def _write_last_chunk(writer: asyncio.StreamWriter) -> None:
+    writer.write(b"0\r\n\r\n")
+    await writer.drain()
+
+
+async def _read_chunk(reader: asyncio.StreamReader) -> Optional[bytes]:
+    """One chunk of a chunked body; None on the terminating 0-chunk."""
+    line = await reader.readline()
+    if not line:
+        raise ConnectionError("peer closed mid-stream")
+    n = int(line.strip().split(b";")[0], 16)
+    if n == 0:
+        await reader.readline()        # blank line after last-chunk
+        return None
+    data = await reader.readexactly(n)
+    await reader.readexactly(2)        # trailing \r\n
+    return data
+
+
+async def _read_head(reader: asyncio.StreamReader) -> Tuple[str, dict]:
+    """Request/response head: first line + lowercased header dict."""
+    head = await reader.readuntil(b"\r\n\r\n")
+    lines = head.decode("latin-1").split("\r\n")
+    headers = {}
+    for ln in lines[1:]:
+        if ":" in ln:
+            k, v = ln.split(":", 1)
+            headers[k.strip().lower()] = v.strip()
+    return lines[0], headers
+
+
+async def _read_sized_body(reader: asyncio.StreamReader,
+                           headers: dict) -> bytes:
+    return await reader.readexactly(int(headers.get("content-length", 0)))
+
+
+_STATUS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+           503: "Service Unavailable"}
+
+
+def _head_bytes(status: int, chunked: bool,
+                content_length: Optional[int] = None) -> bytes:
+    lines = [f"HTTP/1.1 {status} {_STATUS[status]}",
+             "Content-Type: application/json"]
+    if chunked:
+        lines.append("Transfer-Encoding: chunked")
+    else:
+        lines.append(f"Content-Length: {content_length}")
+        lines.append("Connection: close")
+    return ("\r\n".join(lines) + "\r\n\r\n").encode()
+
+
+async def _respond_json(writer: asyncio.StreamWriter, status: int,
+                        payload: dict) -> None:
+    body = json.dumps(jsonable(payload)).encode()
+    writer.write(_head_bytes(status, chunked=False,
+                             content_length=len(body)) + body)
+    await writer.drain()
+
+
+# ---- the engine thread -----------------------------------------------
+
+class EngineWorker:
+    """Dedicated thread owning ONE engine: the only code that ever calls
+    into the engine.  Submitted commands (thunks taking the engine) run
+    between pump iterations of admit -> step -> harvest, and registered
+    done-watchers resolve as soon as their session's result is
+    harvested — so `Session.finish(wait=False)` plus a watcher replaces
+    the in-process blocking `finish()` without the network side ever
+    driving the step loop."""
+
+    def __init__(self, engine: Engine, name: str = "engine-worker",
+                 idle_wait: float = 0.02):
+        self.engine = engine
+        self._idle_wait = idle_wait
+        self._cmds: queue.SimpleQueue = queue.SimpleQueue()
+        self._watchers: List[Tuple[object, concurrent.futures.Future]] = []
+        self._stopping = threading.Event()
+        self._thread = threading.Thread(target=self._run, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    # -- submission (any thread) --
+    def submit(self, fn: Callable[[Engine], object]
+               ) -> concurrent.futures.Future:
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        self._cmds.put((fn, fut))
+        return fut
+
+    async def call(self, fn: Callable[[Engine], object]):
+        return await asyncio.wrap_future(self.submit(fn))
+
+    def watch_done(self, session) -> concurrent.futures.Future:
+        """Future resolving with a defensive copy of `session.result`
+        once the engine harvests it (exception if the session is
+        detached by a reset first)."""
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        self.submit(lambda eng: self._watchers.append((session, fut)))
+        return fut
+
+    def close(self, timeout: float = 5.0) -> None:
+        self._stopping.set()
+        self._thread.join(timeout=timeout)
+
+    # -- the loop (worker thread only) --
+    def _run(self) -> None:
+        busy = False
+        while not self._stopping.is_set():
+            try:
+                item = self._cmds.get(
+                    timeout=0.001 if busy else self._idle_wait)
+            except queue.Empty:
+                item = None
+            while item is not None:
+                self._exec(*item)
+                try:
+                    item = self._cmds.get_nowait()
+                except queue.Empty:
+                    item = None
+            busy = self._pump()
+            self._resolve_watchers()
+        self._drain_on_stop()
+
+    def _exec(self, fn, fut: concurrent.futures.Future) -> None:
+        if not fut.set_running_or_notify_cancel():
+            return
+        try:
+            fut.set_result(fn(self.engine))
+        except BaseException as exc:          # typed errors cross the bridge
+            fut.set_exception(exc)
+
+    def _pump(self) -> bool:
+        eng = self.engine
+        did = eng._admit()
+        did |= eng._step()
+        did |= eng._harvest()
+        return did
+
+    def _resolve_watchers(self) -> None:
+        if not self._watchers:
+            return
+        keep = []
+        for sess, fut in self._watchers:
+            if sess.done:
+                fut.set_result(copy_result(sess.result))
+            elif sess.detached:
+                fut.set_exception(RuntimeError(
+                    f"session {sess.sid}: engine reset before finalize"))
+            else:
+                keep.append((sess, fut))
+        self._watchers = keep
+
+    def _drain_on_stop(self) -> None:
+        exc = RuntimeError("engine worker stopped")
+        while True:
+            try:
+                _, fut = self._cmds.get_nowait()
+            except queue.Empty:
+                break
+            if fut.set_running_or_notify_cancel():
+                fut.set_exception(exc)
+        for _, fut in self._watchers:
+            if not fut.done():
+                fut.set_exception(exc)
+        self._watchers = []
+
+
+def _asr_readout(session) -> dict:
+    """Current best hypothesis WITHOUT driving the engine (the worker's
+    pump loop owns stepping; the in-process `Session.poll` would run
+    `_advance` to quiescence inside a network request)."""
+    eng = session._engine
+    if session.done:
+        return copy_result(session.result)
+    if session.admitted:
+        res = eng.slot_best(session.slot)
+        res["steps"] = int(eng._slot_steps[session.slot])
+        return res
+    return eng._empty_result()
+
+
+# ---- the server -------------------------------------------------------
+
+class EngineServer:
+    """Asyncio front-end over an `AsrEngine` and/or `LmEngine` (each on
+    its own `EngineWorker` thread).  `await start()` binds the socket
+    (port 0 picks a free port, read back from `.port`); `await
+    aclose()` stops the listener and the workers."""
+
+    def __init__(self, asr_engine: Optional[Engine] = None,
+                 lm_engine: Optional[Engine] = None,
+                 host: str = "127.0.0.1", port: int = 0):
+        if asr_engine is None and lm_engine is None:
+            raise ValueError("EngineServer needs at least one engine")
+        self._asr_engine = asr_engine
+        self._lm_engine = lm_engine
+        self.host = host
+        self.port = port
+        self._asr_worker: Optional[EngineWorker] = None
+        self._lm_worker: Optional[EngineWorker] = None
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    async def start(self) -> "EngineServer":
+        if self._asr_engine is not None:
+            self._asr_worker = EngineWorker(self._asr_engine, "asr-worker")
+        if self._lm_engine is not None:
+            self._lm_worker = EngineWorker(self._lm_engine, "lm-worker")
+        self._server = await asyncio.start_server(self._handle, self.host,
+                                                  self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        return self
+
+    async def aclose(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        for worker in (self._asr_worker, self._lm_worker):
+            if worker is not None:
+                worker.close()
+
+    async def serve_forever(self) -> None:
+        assert self._server is not None, "call start() first"
+        await self._server.serve_forever()
+
+    # -- connection handling --
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            first, headers = await _read_head(reader)
+            parts = first.split()
+            method, path = (parts[0], parts[1]) if len(parts) >= 2 else \
+                ("", "")
+            if method == "POST" and path == "/asr":
+                await self._handle_asr(reader, writer)
+            elif method == "POST" and path == "/lm":
+                await self._handle_lm(reader, writer, headers)
+            elif method == "GET" and path == "/metrics":
+                await self._handle_metrics(writer)
+            else:
+                await _respond_json(writer, 404, {"error": "not found"})
+        except (ConnectionError, asyncio.IncompleteReadError,
+                asyncio.LimitOverrunError):
+            pass                    # client went away mid-request
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _handle_asr(self, reader: asyncio.StreamReader,
+                          writer: asyncio.StreamWriter) -> None:
+        worker = self._asr_worker
+        if worker is None:
+            await _respond_json(writer, 404, {"error": "no ASR engine"})
+            return
+        try:
+            sess = await worker.call(lambda eng: eng.open())
+        except AdmissionRejected as exc:
+            await _respond_json(writer, 503, {
+                "error": "admission_rejected",
+                "queue_depth": exc.queue_depth,
+                "max_queue": exc.max_queue})
+            return
+        writer.write(_head_bytes(200, chunked=True))
+        await writer.drain()
+        try:
+            while True:
+                data = await _read_chunk(reader)
+                if data is None:              # client hung up cleanly
+                    break
+                cmd = json.loads(data)
+                op = cmd.get("op")
+                final = False
+                if op == "push":
+                    audio = np.asarray(cmd["audio"], np.float32)
+                    await worker.call(lambda eng: sess.push(audio))
+                    out = {"ok": True}
+                elif op == "poll":
+                    out = jsonable(await worker.call(
+                        lambda eng: _asr_readout(sess)))
+                elif op == "finish":
+                    watcher = worker.watch_done(sess)
+                    await worker.call(lambda eng: sess.finish(wait=False))
+                    out = jsonable(await asyncio.wrap_future(watcher))
+                    final = True
+                else:
+                    out = {"error": f"unknown op: {op!r}"}
+                await _write_chunk(writer, json.dumps(out).encode())
+                if final:
+                    break
+            await _write_last_chunk(writer)
+        finally:
+            if not sess.done and not sess.detached:
+                # disconnect mid-stream: free the slot/queue entry
+                worker.submit(lambda eng: sess.finish(wait=False))
+
+    async def _handle_lm(self, reader: asyncio.StreamReader,
+                         writer: asyncio.StreamWriter,
+                         headers: dict) -> None:
+        worker = self._lm_worker
+        if worker is None:
+            await _respond_json(writer, 404, {"error": "no LM engine"})
+            return
+        body = await _read_sized_body(reader, headers)
+        try:
+            prompt = np.asarray(json.loads(body)["prompt"], np.int32)
+        except (KeyError, ValueError, json.JSONDecodeError) as exc:
+            await _respond_json(writer, 400, {"error": str(exc)})
+            return
+        try:
+            sess = await worker.call(lambda eng: eng.open())
+        except AdmissionRejected as exc:
+            await _respond_json(writer, 503, {
+                "error": "admission_rejected",
+                "queue_depth": exc.queue_depth,
+                "max_queue": exc.max_queue})
+            return
+        try:
+            watcher = worker.watch_done(sess)
+            await worker.call(lambda eng: sess.push(prompt))
+            await worker.call(lambda eng: sess.finish(wait=False))
+            res = await asyncio.wrap_future(watcher)
+        except Exception as exc:
+            await _respond_json(writer, 400, {"error": str(exc)})
+            worker.submit(lambda eng: sess.finish(wait=False))
+            return
+        await _respond_json(writer, 200, res)
+
+    async def _handle_metrics(self, writer: asyncio.StreamWriter) -> None:
+        out = {}
+        if self._asr_worker is not None:
+            out["asr"] = await self._asr_worker.call(
+                lambda eng: eng.metrics.snapshot())
+        if self._lm_worker is not None:
+            out["lm"] = await self._lm_worker.call(
+                lambda eng: eng.metrics.snapshot())
+        await _respond_json(writer, 200, out)
+
+
+# ---- client helpers ---------------------------------------------------
+
+class ServerRejected(RuntimeError):
+    """Client-side image of a 503 admission rejection."""
+
+    def __init__(self, payload: dict):
+        self.queue_depth = payload.get("queue_depth")
+        self.max_queue = payload.get("max_queue")
+        super().__init__(
+            f"server rejected session: queue depth {self.queue_depth} "
+            f"at max_queue={self.max_queue}")
+
+
+def _parse_status(first_line: str) -> int:
+    return int(first_line.split()[1])
+
+
+async def _raise_for_error(status: int, reader: asyncio.StreamReader,
+                           headers: dict) -> None:
+    body = await _read_sized_body(reader, headers)
+    payload = json.loads(body) if body else {}
+    if status == 503:
+        raise ServerRejected(payload)
+    raise RuntimeError(f"server error {status}: {payload}")
+
+
+class AsrClient:
+    """One streaming ASR session over the wire: lockstep JSON-chunk RPC
+    (each command chunk gets exactly one response chunk)."""
+
+    def __init__(self, reader: asyncio.StreamReader,
+                 writer: asyncio.StreamWriter):
+        self._reader = reader
+        self._writer = writer
+        self._closed = False
+
+    @classmethod
+    async def open(cls, host: str, port: int) -> "AsrClient":
+        reader, writer = await asyncio.open_connection(host, port)
+        writer.write((f"POST /asr HTTP/1.1\r\nHost: {host}:{port}\r\n"
+                      "Content-Type: application/json\r\n"
+                      "Transfer-Encoding: chunked\r\n\r\n").encode())
+        await writer.drain()
+        first, headers = await _read_head(reader)
+        status = _parse_status(first)
+        if status != 200:
+            try:
+                await _raise_for_error(status, reader, headers)
+            finally:
+                writer.close()
+        return cls(reader, writer)
+
+    async def _rpc(self, obj: dict) -> dict:
+        await _write_chunk(self._writer, json.dumps(obj).encode())
+        data = await _read_chunk(self._reader)
+        if data is None:
+            raise ConnectionError("server ended the response stream")
+        return json.loads(data)
+
+    async def push(self, audio) -> dict:
+        return await self._rpc(
+            {"op": "push",
+             "audio": np.asarray(audio, np.float32).tolist()})
+
+    async def poll(self) -> dict:
+        return await self._rpc({"op": "poll"})
+
+    async def finish(self) -> dict:
+        res = await self._rpc({"op": "finish"})
+        await _read_chunk(self._reader)       # server's terminating chunk
+        await self.aclose()
+        return res
+
+    async def aclose(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            await _write_last_chunk(self._writer)
+        except (ConnectionError, OSError):
+            pass
+        self._writer.close()
+        try:
+            await self._writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+async def _post_json(host: str, port: int, path: str,
+                     payload: dict) -> dict:
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        body = json.dumps(jsonable(payload)).encode()
+        writer.write((f"POST {path} HTTP/1.1\r\nHost: {host}:{port}\r\n"
+                      "Content-Type: application/json\r\n"
+                      f"Content-Length: {len(body)}\r\n\r\n").encode()
+                     + body)
+        await writer.drain()
+        first, headers = await _read_head(reader)
+        status = _parse_status(first)
+        if status != 200:
+            await _raise_for_error(status, reader, headers)
+        return json.loads(await _read_sized_body(reader, headers))
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+async def lm_generate(host: str, port: int, prompt) -> dict:
+    """One-shot LM generation over the wire."""
+    return await _post_json(host, port, "/lm",
+                            {"prompt": np.asarray(prompt).tolist()})
+
+
+async def fetch_metrics(host: str, port: int) -> dict:
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write((f"GET /metrics HTTP/1.1\r\nHost: {host}:{port}"
+                      "\r\n\r\n").encode())
+        await writer.drain()
+        first, headers = await _read_head(reader)
+        status = _parse_status(first)
+        if status != 200:
+            await _raise_for_error(status, reader, headers)
+        return json.loads(await _read_sized_body(reader, headers))
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass

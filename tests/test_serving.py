@@ -52,7 +52,10 @@ def _same(a, b, tol=1e-3):
 def _reference_decode(audio, words, lex, lm, dcfg, params):
     """Pre-engine ground truth: the fused decoding step re-derived from
     the core primitives, with window bookkeeping straight from
-    frames_producible/consumed_samples.  Returns (best dict, n_steps)."""
+    frames_producible/consumed_samples.  Like the engine, end-of-input
+    zero-pads and decodes a trailing partial window (samples beyond the
+    frame_len - frame_shift framing overlap were never covered by a
+    decoded frame).  Returns (best dict, n_steps)."""
     nfr = 8                      # 80 ms / 10 ms shift
     spp = features.consumed_samples(nfr, FEAT16)
     need = FEAT16.frame_len + (nfr - 1) * FEAT16.frame_shift
@@ -60,12 +63,22 @@ def _reference_decode(audio, words, lex, lm, dcfg, params):
     bm = decoder.init_state(dcfg.beam_size, lm)
     buf = np.asarray(audio, np.float32)
     steps = 0
-    while features.frames_producible(buf.shape[0], FEAT16) >= nfr:
+
+    def one_step(buf, ss, bm):
         feats = features.mfcc(jnp.asarray(buf[:need]), FEAT16)[:nfr]
         logp, ss = tds.forward(params, TINY_TDS, feats, ss)
         for t in range(logp.shape[0]):
             bm = decoder.expand_step(bm, logp[t], lex, lm, dcfg)
+        return ss, bm
+
+    while features.frames_producible(buf.shape[0], FEAT16) >= nfr:
+        ss, bm = one_step(buf, ss, bm)
         buf = buf[spp:]
+        steps += 1
+    if buf.shape[0] > need - spp:        # trailing partial window
+        padded = np.zeros((need,), np.float32)
+        padded[:buf.shape[0]] = buf
+        ss, bm = one_step(padded, ss, bm)
         steps += 1
     return decoder.best_hypothesis(bm, lex, lm, dcfg, final=True), steps
 
@@ -111,6 +124,75 @@ def test_poll_is_read_only_on_results():
     again = session.poll()
     _same(fin, again, tol=0.0)
     assert again["steps"] == fin["steps"]
+
+
+def test_polled_result_mutation_cannot_corrupt_engine():
+    """Results handed out by poll()/finish()/serve() are defensive
+    copies: mutating a polled payload in place must not change what any
+    later poll returns.  The old path returned `dict(result)` — a
+    shallow copy whose numpy arrays ALIASED the engine-stored result."""
+    engine, words = _asr_engine(1)
+    audio = SyntheticASR(words).utterance(3)["audio"]
+    session = engine.open().push(audio)
+    pristine = session.finish()
+    victim = session.poll()
+    assert victim["tokens"].size > 0        # something to corrupt
+    victim["tokens"][:] = -7
+    victim["words"][:] = -7
+    fresh = session.poll()
+    _same(fresh, pristine, tol=0.0)
+    assert not np.array_equal(fresh["tokens"], victim["tokens"])
+
+    # the LM engine's token list is isolated the same way
+    cfg = get_config("mamba2-1.3b").tiny()
+    lm_engine = LmEngine(
+        EngineConfig(LmProgram(cfg, cache_len=16, max_new=4), n_slots=1),
+        LM(cfg).init(jax.random.PRNGKey(0)))
+    s = lm_engine.open().push(np.arange(1, 6, dtype=np.int32))
+    ref_tokens = list(s.poll()["tokens"])
+    polled = s.poll()
+    polled["tokens"].append(999)
+    assert s.poll()["tokens"] == ref_tokens
+
+
+def test_tail_flush_decodes_final_partial_window():
+    """finish() must decode the trailing partial window instead of
+    silently dropping it.  Pinned as parity: flushing a truncated
+    utterance is bit-identical to explicitly pushing the same audio
+    zero-padded to the window boundary (so whatever words end in the
+    tail appear exactly as a full-window decode of them would), and an
+    utterance ending exactly on the framing overlap is bit-identical
+    between flush_tail=True and flush_tail=False engines."""
+    engine, words = _asr_engine(1)
+    spp, need, overlap = engine._spp, engine._need, engine._overlap
+    audio = SyntheticASR(words).utterance(3)["audio"]
+    k = 3
+    L = k * spp + overlap + 600              # real samples past the overlap
+    assert overlap < L - k * spp < need and len(audio) >= k * spp + need
+    trunc = audio[:L]
+    got = engine.open().push(trunc).finish()
+    assert got["steps"] == k + 1             # exactly one extra flush step
+
+    padded = np.concatenate(
+        [trunc, np.zeros((k * spp + need - L,), np.float32)])
+    ref = engine.open().push(padded).finish()
+    assert ref["steps"] == k + 1
+    _same(got, ref, tol=0.0)
+
+    # window-boundary utterances (nothing past the overlap) are
+    # untouched: bit-identical with flushing disabled
+    exact = audio[:k * spp + overlap]
+    words_, lex, lm, dcfg, params = _asr_system()
+    no_flush = AsrEngine(
+        EngineConfig(AsrProgram(TINY_TDS, lex, lm, FEAT16, dcfg,
+                                flush_tail=False), n_slots=1), params)
+    a = engine.open().push(exact).finish()
+    b = no_flush.open().push(exact).finish()
+    assert a["steps"] == b["steps"] == k
+    _same(a, b, tol=0.0)
+    # and the no-flush engine really does drop the tail the flush decodes
+    c = no_flush.open().push(trunc).finish()
+    assert c["steps"] == k == got["steps"] - 1
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +288,126 @@ def test_engine_reset_detaches_live_sessions():
     _same(done.poll(), done_res, tol=0.0)
     # and the pool itself is fresh
     assert engine.open().admitted and engine.n_steps == 0
+
+
+def test_engine_reset_detaches_queued_sessions():
+    """reset() detaches sessions still WAITING for a slot, not just the
+    active ones — a queued handle must raise afterwards, not silently
+    re-enter a zeroed pool."""
+    engine, _ = _asr_engine(1)
+    active = engine.open().push(np.zeros((2000,), np.float32))
+    queued = engine.open()
+    assert active.admitted and not queued.admitted
+    engine.reset()
+    for sess in (active, queued):
+        for op in (lambda s=sess: s.push(np.zeros((10,), np.float32)),
+                   sess.poll, sess.finish):
+            with pytest.raises(RuntimeError, match="detached"):
+                op()
+
+
+def test_finish_while_queued_returns_none_then_poll_collects():
+    """finish() on a still-queued session cannot finalize (its slot is
+    held by an unfinished stream): it returns None, and the result is
+    collected later via poll() once the slot frees — matching the
+    dedicated single-slot decode."""
+    engine, words = _asr_engine(1)
+    data = SyntheticASR(words)
+    a0, a1 = data.utterance(0)["audio"], data.utterance(1)["audio"]
+    s0 = engine.open().push(a0)              # holds the only slot
+    s1 = engine.open().push(a1)
+    assert not s1.admitted
+    assert s1.finish() is None and not s1.done
+    s0.finish()                              # frees the slot
+    r1 = s1.poll()
+    assert s1.done
+    single, _ = _asr_engine(1)
+    _same(r1, single.open().push(a1).finish())
+
+
+def test_admission_rejected_at_max_queue():
+    """With every slot busy and the queue at `max_queue`, open() raises
+    the typed `AdmissionRejected` (carrying depth and bound) instead of
+    queueing unboundedly — and the queue depth never exceeds the bound."""
+    from repro.serving import AdmissionRejected
+
+    words, lex, lm, dcfg, params = _asr_system()
+    program = AsrProgram(TINY_TDS, lex, lm, FEAT16, dcfg)
+    engine = AsrEngine(EngineConfig(program, n_slots=1, max_queue=2),
+                       params)
+    active = engine.open()                   # takes the slot
+    queued = [engine.open(), engine.open()]  # fills the queue
+    assert active.admitted and not any(q.admitted for q in queued)
+    with pytest.raises(AdmissionRejected) as exc:
+        engine.open()
+    assert exc.value.queue_depth == 2 and exc.value.max_queue == 2
+    assert engine.metrics.rejected == 1
+    assert engine.metrics.max_queue_depth <= 2
+
+    # freeing the slot re-opens admission
+    active.push(SyntheticASR(words).utterance(0)["audio"])
+    active.finish()
+    assert queued[0].admitted                # head of the queue moved up
+    late = engine.open()                     # depth back under the bound
+    assert late is not None
+
+    # max_queue=0 means "never queue": reject unless a slot is free
+    strict = AsrEngine(EngineConfig(program, n_slots=1, max_queue=0),
+                       params)
+    strict.open()
+    with pytest.raises(AdmissionRejected):
+        strict.open()
+
+
+def test_session_queue_removal_scales_linearly():
+    """Admission removes sessions from the MIDDLE of the queue (LM
+    sessions waiting on prompts, the unadmittable-harvest path):
+    `SessionQueue.remove` must be O(1), not deque's O(position) — so
+    per-removal cost must not grow with queue length."""
+    from time import perf_counter
+
+    from repro.serving.engine import SessionQueue
+
+    def per_removal(n):
+        q = SessionQueue()
+        items = [object() for _ in range(n)]
+        for it in items:
+            q.append(it)
+        victims = items[n // 4: 3 * n // 4]          # all mid-queue
+        t0 = perf_counter()
+        for it in victims:
+            q.remove(it)
+        dt = perf_counter() - t0
+        assert len(q) == n - len(victims)
+        return max(dt / len(victims), 1e-9)
+
+    per_removal(1000)                         # warm up allocator/caches
+    small, big = per_removal(2000), per_removal(40000)
+    # O(1): ratio ~1 (deque.remove measures ~10-20x here); generous
+    # bound + absolute floor keep CI timing noise out
+    assert big < small * 8 + 2e-6, (small, big)
+
+
+def test_engine_metrics_lifecycle_counters():
+    """EngineMetrics sees every session event: opened/admitted/finalized
+    counters, first-result and finalize latency samples, queue-depth
+    high-water mark, and step occupancy."""
+    engine, words = _asr_engine(2)
+    data = SyntheticASR(words)
+    engine.serve([data.utterance(i)["audio"] for i in range(3)])
+    m = engine.metrics
+    assert m.opened == m.admitted == m.finalized == 3
+    assert m.rejected == 0
+    assert m.max_queue_depth >= 1            # third utterance had to wait
+    assert m.queue_depth == 0                # drained
+    assert m.first_result.count == 3 and m.finalize.count == 3
+    assert m.e2e.count == 3 and m.queue_wait.count == 3
+    assert m.steps == engine.n_steps > 0
+    assert 0.0 < m.occupancy() <= 1.0
+    snap = m.snapshot()
+    assert snap["sessions"]["finalized"] == 3
+    assert snap["latency"]["first_result"]["count"] == 3
+    assert snap["latency"]["e2e"]["p95_ms"] >= 0.0
 
 
 # ---------------------------------------------------------------------------

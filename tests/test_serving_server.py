@@ -1,0 +1,181 @@
+"""Network serving front-end (repro.serving.server): wire-protocol
+parity against in-process decoding, concurrent streaming sessions over
+one engine-worker thread, typed 503 backpressure with a bounded queue,
+the /metrics endpoint, and one-shot LM generation over the wire."""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticASR
+from repro.models import LM
+from repro.serving import (AsrEngine, AsrProgram, EngineConfig, LmEngine,
+                           LmProgram)
+from repro.serving.server import (AsrClient, EngineServer, ServerRejected,
+                                  fetch_metrics, lm_generate)
+from test_serving import FEAT16, TINY_TDS, _asr_system, _same
+
+
+def _asr_engine(n_slots, max_queue=None):
+    words, lex, lm, dcfg, params = _asr_system()
+    program = AsrProgram(TINY_TDS, lex, lm, FEAT16, dcfg)
+    engine = AsrEngine(EngineConfig(program, n_slots=n_slots,
+                                    max_queue=max_queue), params)
+    return engine, words
+
+
+def _as_result(payload: dict) -> dict:
+    """Wire payload (JSON lists) -> the in-process result shape."""
+    return {"words": np.asarray(payload["words"], np.int32),
+            "tokens": np.asarray(payload["tokens"], np.int32),
+            "score": float(payload["score"]),
+            "steps": payload["steps"]}
+
+
+async def _with_server(server: EngineServer, coro_fn):
+    await server.start()
+    try:
+        return await coro_fn(server)
+    finally:
+        await server.aclose()
+
+
+def test_server_asr_stream_matches_inprocess_and_metrics():
+    """One streaming session over the wire — chunked pushes, live
+    polls, finish — returns exactly the in-process decode, and the
+    /metrics endpoint reports the session's lifecycle."""
+    engine, words = _asr_engine(1)
+    audio = SyntheticASR(words).utterance(3)["audio"]
+
+    async def go(server):
+        client = await AsrClient.open(server.host, server.port)
+        saw_live_poll = False
+        for off in range(0, len(audio), 4000):
+            assert (await client.push(audio[off:off + 4000]))["ok"]
+            live = await client.poll()
+            assert {"words", "tokens", "score", "steps"} <= set(live)
+            saw_live_poll |= live["steps"] > 0
+        final = await client.finish()
+        metrics = await fetch_metrics(server.host, server.port)
+        return final, saw_live_poll, metrics
+
+    final, saw_live_poll, metrics = asyncio.run(
+        _with_server(EngineServer(asr_engine=engine), go))
+    assert saw_live_poll           # the worker stepped between pushes
+
+    ref_engine, _ = _asr_engine(1)
+    ref = ref_engine.open().push(audio).finish()
+    _same(_as_result(final), ref)
+    assert final["steps"] == ref["steps"]
+
+    m = metrics["asr"]
+    assert m["sessions"] == {"opened": 1, "admitted": 1, "rejected": 0,
+                             "finalized": 1}
+    assert m["latency"]["first_result"]["count"] == 1
+    assert m["latency"]["finalize"]["count"] == 1
+    assert m["steps"]["occupancy"] > 0
+
+
+def test_server_concurrent_streams_all_match_dedicated_decode():
+    """Five concurrent staggered client streams over a 2-slot engine:
+    every transcript equals its dedicated in-process decode (the
+    worker's pump loop batches whoever holds a slot)."""
+    n_utts = 5
+    engine, words = _asr_engine(2)
+    data = SyntheticASR(words)
+    utts = [data.utterance(i)["audio"] for i in range(n_utts)]
+
+    async def one_stream(server, audio, stagger):
+        await asyncio.sleep(stagger)
+        client = await AsrClient.open(server.host, server.port)
+        for off in range(0, len(audio), 3000):
+            await client.push(audio[off:off + 3000])
+            await asyncio.sleep(0)
+        return await client.finish()
+
+    async def go(server):
+        return await asyncio.gather(*[
+            one_stream(server, audio, 0.01 * i)
+            for i, audio in enumerate(utts)])
+
+    finals = asyncio.run(_with_server(EngineServer(asr_engine=engine), go))
+
+    single, _ = _asr_engine(1)
+    for audio, final in zip(utts, finals):
+        ref = single.open().push(audio).finish()
+        _same(_as_result(final), ref)
+
+
+def test_server_overload_rejects_503_and_bounds_queue():
+    """Overload policy over the wire: with the slot busy and the queue
+    at max_queue, a new connection gets a 503 (raised client-side as
+    `ServerRejected` carrying depth and bound), the engine queue depth
+    never exceeds the bound, and rejected sessions are counted.  Once
+    streams drain, admission opens again."""
+    engine, words = _asr_engine(1, max_queue=1)
+    audio = SyntheticASR(words).utterance(0)["audio"]
+
+    async def go(server):
+        active = await AsrClient.open(server.host, server.port)
+        queued = await AsrClient.open(server.host, server.port)
+        with pytest.raises(ServerRejected) as exc:
+            await AsrClient.open(server.host, server.port)
+        assert exc.value.queue_depth == 1 and exc.value.max_queue == 1
+
+        await active.push(audio)
+        await queued.push(audio)
+        r_active = await active.finish()     # frees the slot -> admits
+        r_queued = await queued.finish()
+
+        late = await AsrClient.open(server.host, server.port)
+        await late.push(audio)
+        r_late = await late.finish()
+        metrics = await fetch_metrics(server.host, server.port)
+        return [r_active, r_queued, r_late], metrics
+
+    finals, metrics = asyncio.run(
+        _with_server(EngineServer(asr_engine=engine), go))
+
+    m = metrics["asr"]
+    assert m["sessions"]["rejected"] == 1
+    assert m["sessions"]["opened"] == m["sessions"]["finalized"] == 3
+    assert m["queue"]["max_depth"] <= 1      # bounded under overload
+    single, _ = _asr_engine(1)
+    ref = single.open().push(audio).finish()
+    for final in finals:
+        _same(_as_result(final), ref)
+
+
+def test_server_lm_generate_matches_inprocess():
+    cfg = get_config("mamba2-1.3b").tiny()
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    program = LmProgram(cfg, cache_len=16, max_new=4)
+    engine = LmEngine(EngineConfig(program, n_slots=2), params)
+    prompts = [np.arange(1, 6, dtype=np.int32),
+               np.arange(2, 9, dtype=np.int32)]
+
+    async def go(server):
+        return await asyncio.gather(*[
+            lm_generate(server.host, server.port, p) for p in prompts])
+
+    outs = asyncio.run(_with_server(EngineServer(lm_engine=engine), go))
+
+    ref_engine = LmEngine(EngineConfig(program, n_slots=1), params)
+    for prompt, out in zip(prompts, outs):
+        assert out["done"]
+        assert out["tokens"] == ref_engine.serve([prompt])[0]
+
+
+def test_server_unknown_route_and_missing_engine():
+    """Bad routes 404; an LM request against an ASR-only server 404s
+    (typed errors cross the wire, they don't hang the connection)."""
+    engine, _ = _asr_engine(1)
+
+    async def go(server):
+        with pytest.raises(RuntimeError, match="404"):
+            await lm_generate(server.host, server.port, [1, 2, 3])
+        return True
+
+    assert asyncio.run(_with_server(EngineServer(asr_engine=engine), go))
