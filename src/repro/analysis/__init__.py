@@ -1,0 +1,38 @@
+"""repro-lint: repo-specific static analysis for the JAX/Pallas serving
+stack (`python -m repro.analysis src/`).
+
+Five AST rules encode the contracts the serving engines, kernels, and
+launchers rely on — each one a bug class that previously had to be
+found by hand (see README "Static analysis" for the rule table and
+docs/examples):
+
+  RPL001  jit hazards: Python control flow / int()/float()/.item() on
+          tracer-derived values inside jit-traced functions, and
+          mutable defaults on static jit args (silent retraces,
+          TracerBoolConversionError).
+  RPL002  kernel contract: every `pl.pallas_call` site is registered in
+          kernels/policy.py KERNEL_REGISTRY with a ref twin that exists
+          and an interpret-parity test that references it, and its
+          grid/BlockSpec divisibility assumption is shape-checked or
+          has a documented fallback.
+  RPL003  aliasing: results built from engine-owned slot state must
+          route through `copy_result` before they escape the engine
+          (the PR 6 poll-aliasing class).
+  RPL004  thread discipline: `@worker_only` engine methods may not be
+          called from asyncio handlers except through an EngineWorker
+          submit/call thunk.
+  RPL005  RNG discipline: modules that jit with `out_shardings` and
+          create PRNG keys must call `mesh_invariant_rng()` (the PR 5
+          elastic mesh-dependent-init class).
+
+Suppress a finding with a trailing or preceding-line comment
+`# repro-lint: disable=RPL001` (comma-separate several codes), or a
+whole file with `# repro-lint: disable-file=RPL001`.
+
+The runtime counterpart lives in `repro.analysis.guards`: compilation
+budgets (counting real XLA compiles via jax.monitoring) and transfer
+guards for the serving hot path.
+"""
+from repro.analysis.core import Finding, RULE_DOCS, run_paths
+
+__all__ = ["Finding", "RULE_DOCS", "run_paths"]

@@ -1,0 +1,57 @@
+"""CLI: `python -m repro.analysis src/` — exit 1 on unsuppressed
+findings, 0 otherwise.  `--list-rules` prints the rule table,
+`--config-usage` prints the config-registry liveness report."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.core import RULE_DOCS, find_repo_root, run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: repo-specific JAX/Pallas static analysis")
+    ap.add_argument("paths", nargs="*", default=["src/"],
+                    help="files or directories to analyze (default: src/)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset of rule codes to run")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    ap.add_argument("--config-usage", action="store_true",
+                    help="print the config-registry liveness report")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print findings silenced by repro-lint "
+                         "disable comments")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code, doc in sorted(RULE_DOCS.items()):
+            print(f"{code}  {doc}")
+        return 0
+
+    if args.config_usage:
+        import pathlib
+
+        from repro.analysis.imports import config_usage, format_config_usage
+        root = find_repo_root(pathlib.Path(args.paths[0]
+                                           if args.paths else "."))
+        print(format_config_usage(config_usage(root)))
+        return 0
+
+    rules = args.rules.split(",") if args.rules else None
+    paths = args.paths or ["src/"]
+    findings, suppressed = run_paths(paths, rules=rules)
+    for f in findings:
+        print(f.format())
+    if args.show_suppressed:
+        for f in suppressed:
+            print(f"[suppressed] {f.format()}")
+    tail = f"{len(findings)} finding(s), {len(suppressed)} suppressed"
+    print(tail if findings or suppressed else f"repro-lint clean ({tail})")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,190 @@
+"""repro-lint driver: file walking, suppressions, rule dispatch.
+
+Two-phase analysis: every file is parsed once into a `ParsedModule`,
+a shared `Context` gathers the cross-file facts the rules need (the
+kernel registry literal from kernels/policy.py, the set of
+`@worker_only`-annotated method names), then per-file and global rules
+run over the parsed set.  Pure stdlib `ast` — nothing here imports jax,
+so the linter runs in milliseconds and in any environment.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set
+
+SUPPRESS_TAG = "# repro-lint: disable="
+SUPPRESS_FILE_TAG = "# repro-lint: disable-file="
+
+RULE_DOCS = {
+    "RPL001": "jit hazard: Python control flow or host coercion on a "
+              "tracer, or a mutable default on a static jit arg",
+    "RPL002": "kernel contract: pallas_call without a registered ref "
+              "twin + parity test + shape-guarded grid assumptions",
+    "RPL003": "aliasing: engine slot state escapes without copy_result",
+    "RPL004": "thread discipline: @worker_only engine method called "
+              "from an asyncio handler outside a worker thunk",
+    "RPL005": "RNG discipline: out_shardings init without "
+              "mesh_invariant_rng()",
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} " \
+               f"{self.message}"
+
+
+@dataclass
+class ParsedModule:
+    path: pathlib.Path
+    rel: str                      # path relative to the repo root
+    source: str
+    tree: ast.Module
+    lines: List[str] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.lines:
+            self.lines = self.source.splitlines()
+
+
+class Suppressions:
+    """Per-file suppression map.
+
+    A `# repro-lint: disable=RPL001[,RPL002]` comment suppresses those
+    codes on its own line; on a comment-only line it also suppresses the
+    next line (so a suppression can sit above a long statement).
+    `# repro-lint: disable-file=RPL001` suppresses a code everywhere in
+    the file.  Suppressed findings are counted, never silently lost.
+    """
+
+    def __init__(self, lines: Sequence[str]):
+        self.by_line: Dict[int, Set[str]] = {}
+        self.file_wide: Set[str] = set()
+        for i, text in enumerate(lines, start=1):
+            if SUPPRESS_FILE_TAG in text:
+                self.file_wide |= self._codes(text, SUPPRESS_FILE_TAG)
+            if SUPPRESS_TAG in text:
+                codes = self._codes(text, SUPPRESS_TAG)
+                self.by_line.setdefault(i, set()).update(codes)
+                if text.lstrip().startswith("#"):    # comment-only line
+                    self.by_line.setdefault(i + 1, set()).update(codes)
+
+    @staticmethod
+    def _codes(text: str, tag: str) -> Set[str]:
+        spec = text.split(tag, 1)[1].split("#")[0]
+        codes = set()
+        for chunk in spec.replace(";", ",").split(","):
+            tok = chunk.strip().split()
+            if tok and tok[0].startswith("RPL"):
+                codes.add(tok[0])
+        return codes
+
+    def covers(self, finding: Finding) -> bool:
+        if finding.code in self.file_wide:
+            return True
+        return finding.code in self.by_line.get(finding.line, set())
+
+
+def parse_file(path: pathlib.Path, root: pathlib.Path) -> ParsedModule:
+    src = path.read_text()
+    try:
+        rel = str(path.relative_to(root))
+    except ValueError:
+        rel = str(path)
+    return ParsedModule(path=path, rel=rel, source=src,
+                        tree=ast.parse(src, filename=str(path)))
+
+
+def find_repo_root(start: pathlib.Path) -> pathlib.Path:
+    """Nearest ancestor holding pyproject.toml or .git (the anchor for
+    registry-relative paths like `tests/test_kernels.py`)."""
+    cur = start.resolve()
+    if cur.is_file():
+        cur = cur.parent
+    for cand in (cur, *cur.parents):
+        if (cand / "pyproject.toml").exists() or (cand / ".git").exists():
+            return cand
+    return cur
+
+
+@dataclass
+class Context:
+    root: pathlib.Path
+    modules: Dict[str, ParsedModule]
+    worker_only_names: Set[str] = field(default_factory=set)
+
+
+def _collect_worker_only(modules: Dict[str, ParsedModule]) -> Set[str]:
+    names: Set[str] = set()
+    for mod in modules.values():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for deco in node.decorator_list:
+                    d = deco.func if isinstance(deco, ast.Call) else deco
+                    tail = d.attr if isinstance(d, ast.Attribute) else \
+                        d.id if isinstance(d, ast.Name) else None
+                    if tail == "worker_only":
+                        names.add(node.name)
+    return names
+
+
+def iter_py_files(paths: Sequence[str]) -> List[pathlib.Path]:
+    out: List[pathlib.Path] = []
+    for p in paths:
+        pth = pathlib.Path(p)
+        if pth.is_dir():
+            out.extend(sorted(f for f in pth.rglob("*.py")
+                              if "__pycache__" not in f.parts))
+        elif pth.suffix == ".py":
+            out.append(pth)
+    return out
+
+
+def run_paths(paths: Sequence[str], *,
+              rules: Optional[Sequence[str]] = None,
+              root: Optional[pathlib.Path] = None):
+    """Analyze `paths`; returns (findings, suppressed) with findings
+    sorted by (path, line, code).  `rules` restricts to a subset of
+    codes (default: all)."""
+    from repro.analysis import rules as rulemod
+
+    files = iter_py_files(paths)
+    if root is None:
+        root = find_repo_root(files[0] if files else pathlib.Path("."))
+    modules = {str(f): parse_file(f, root) for f in files}
+    ctx = Context(root=root, modules=modules)
+    ctx.worker_only_names = _collect_worker_only(modules)
+
+    active = set(rules or RULE_DOCS)
+    raw: List[Finding] = []
+    for mod in modules.values():
+        for code, rule in rulemod.PER_FILE_RULES.items():
+            if code in active:
+                raw.extend(rule(mod, ctx))
+    for code, rule in rulemod.GLOBAL_RULES.items():
+        if code in active:
+            raw.extend(rule(ctx))
+
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    supp_cache: Dict[str, Suppressions] = {}
+    for f in raw:
+        mod = next((m for m in modules.values() if m.rel == f.path), None)
+        if mod is not None:
+            if mod.rel not in supp_cache:
+                supp_cache[mod.rel] = Suppressions(mod.lines)
+            if supp_cache[mod.rel].covers(f):
+                suppressed.append(f)
+                continue
+        findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings, suppressed

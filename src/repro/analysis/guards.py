@@ -1,0 +1,113 @@
+"""Runtime counterparts to the static rules: compilation budgets and
+transfer guards.
+
+Static analysis can prove a `float()` sits inside a jit trace, but not
+that a shape-polymorphic call path retraces per request — that only
+shows up at runtime.  `count_compilations()` counts REAL XLA backend
+compiles (via jax.monitoring's backend_compile duration event, which
+does not fire on tracing-cache or persistent-cache hits), and
+`compilation_budget(n)` turns a count into an assertion, generalizing
+the hand-rolled jit-entry counters the serving tests used to carry.
+
+`no_implicit_transfers()` wraps jax.transfer_guard("disallow") for the
+serving hot path: the jitted step must receive device arrays, never
+silently upload numpy scalars or read back scalar indices per step.
+
+jax is imported lazily so `python -m repro.analysis` stays stdlib-only.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, List
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_lock = threading.Lock()
+_listener_installed = False
+_active: List["CompilationCounter"] = []
+
+
+class CompilationCounter:
+    """Counts XLA backend compiles observed while active."""
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    def _bump(self) -> None:
+        self.count += 1
+
+
+def _on_compile_event(event: str, duration: float, **kwargs) -> None:
+    if event != _COMPILE_EVENT:
+        return
+    with _lock:
+        for counter in _active:
+            counter._bump()
+
+
+def _ensure_listener() -> None:
+    global _listener_installed
+    with _lock:
+        if _listener_installed:
+            return
+        import jax
+
+        jax.monitoring.register_event_duration_secs_listener(
+            _on_compile_event)
+        _listener_installed = True
+
+
+@contextlib.contextmanager
+def count_compilations() -> Iterator[CompilationCounter]:
+    """Yield a CompilationCounter tallying real XLA compiles (cache
+    hits — tracing cache or persistent compilation cache — don't fire
+    the event, so re-entering an already-compiled jit counts 0)."""
+    _ensure_listener()
+    counter = CompilationCounter()
+    with _lock:
+        _active.append(counter)
+    try:
+        yield counter
+    finally:
+        with _lock:
+            _active.remove(counter)
+
+
+@contextlib.contextmanager
+def compilation_budget(budget: int, what: str = "block") -> \
+        Iterator[CompilationCounter]:
+    """Assert at most `budget` fresh XLA compiles happen in the block.
+
+    A budget of 0 pins "fully warmed: no retraces allowed" — the main
+    use in the serving tests.  The assertion is skipped if the body
+    raised, so the budget never masks the original failure.
+    """
+    with count_compilations() as counter:
+        yield counter
+    if counter.count > budget:
+        raise AssertionError(
+            f"compilation budget exceeded for {what}: "
+            f"{counter.count} XLA compiles > budget {budget} "
+            "(an input shape/dtype/static-arg is varying per call)")
+
+
+@contextlib.contextmanager
+def no_implicit_transfers() -> Iterator[None]:
+    """Disallow implicit host<->device transfers in the block.
+
+    Wraps the serving engines' jitted step calls: arguments must
+    already be device arrays (explicit jnp.asarray conversion is fine
+    and still allowed by the guard), and nothing inside may trigger a
+    per-step scalar readback.
+
+    Only the host<->device directions are guarded: device-to-device
+    transfers stay allowed because mesh-sharded serving legitimately
+    reshards the step's committed inputs across the mesh on dispatch
+    (a blanket transfer_guard("disallow") breaks `--mesh N`).
+    """
+    import jax
+
+    with jax.transfer_guard_host_to_device("disallow"), \
+            jax.transfer_guard_device_to_host("disallow"):
+        yield

@@ -1,0 +1,574 @@
+"""The five repro-lint rules (see repro.analysis.__doc__ for the codes).
+
+All rules are call-graph-LOCAL by design: they resolve names within one
+module (plus the declared cross-file anchors — the kernel registry in
+kernels/policy.py, `@worker_only` decorators, registry-named test
+files).  That keeps them fast and predictable; contracts that need
+whole-program reasoning get a runtime guard in `repro.analysis.guards`
+instead.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import Context, Finding, ParsedModule
+
+# attribute reads that yield STATIC Python values even on a tracer
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding"}
+# module roots whose calls produce tracer values inside a jit trace
+_ARRAY_ROOTS = {"jnp", "jax", "lax"}
+_JIT_WRAPPERS = {"jit"}                 # jax.jit / compat aliases
+_TRACE_CONSUMERS = {                    # callable-arg positions traced by jax
+    "jit": (0,), "shard_map": (0,), "scan": (0,), "vmap": (0,),
+    "pallas_call": (0,), "while_loop": (0, 1), "fori_loop": (2,),
+    "checkpoint": (0,), "remat": (0,), "grad": (0,), "value_and_grad": (0,),
+}
+
+
+def _attr_tail(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _attr_root(node: ast.AST) -> Optional[str]:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _const_strs(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return [s for elt in node.elts for s in _const_strs(elt)]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# RPL001 — jit hazards
+# ---------------------------------------------------------------------------
+
+class _JitRoot:
+    def __init__(self, fn, static_names: Set[str], static_nums: Set[int]):
+        self.fn = fn
+        self.static_names = static_names
+        self.static_nums = static_nums
+
+
+def _jit_call_info(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names |= set(_const_strs(kw.value))
+        elif kw.arg == "static_argnums":
+            if isinstance(kw.value, ast.Constant) and \
+                    isinstance(kw.value.value, int):
+                nums.add(kw.value.value)
+            elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                nums |= {e.value for e in kw.value.elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, int)}
+    return names, nums
+
+
+def _decorator_jit(deco: ast.AST) -> Optional[Tuple[Set[str], Set[int]]]:
+    """(static_argnames, static_argnums) if `deco` is a jit decorator:
+    @jax.jit, @jit, @partial(jax.jit, ...), @functools.partial(jax.jit)."""
+    if _attr_tail(deco) in _JIT_WRAPPERS:
+        return set(), set()
+    if isinstance(deco, ast.Call):
+        tail = _attr_tail(deco.func)
+        if tail in _JIT_WRAPPERS:
+            return _jit_call_info(deco)
+        if tail == "partial" and deco.args and \
+                _attr_tail(deco.args[0]) in _JIT_WRAPPERS:
+            return _jit_call_info(deco)
+    return None
+
+
+def _collect_jit_roots(mod: ParsedModule) -> List[_JitRoot]:
+    """Functions traced by jax, resolved module-locally: jit-decorated
+    defs, plus defs/lambdas whose NAME is passed to a trace-consuming
+    call (jax.jit(step), shard_map(step, ...), lax.scan(body, ...))."""
+    defs: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef):
+            defs.setdefault(node.name, []).append(node)
+
+    roots: List[_JitRoot] = []
+    seen: Set[ast.AST] = set()
+
+    def add(fn, names=frozenset(), nums=frozenset()):
+        if fn not in seen:
+            seen.add(fn)
+            roots.append(_JitRoot(fn, set(names), set(nums)))
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef):
+            for deco in node.decorator_list:
+                info = _decorator_jit(deco)
+                if info is not None:
+                    add(node, *info)
+        if isinstance(node, ast.Call):
+            tail = _attr_tail(node.func)
+            if tail not in _TRACE_CONSUMERS:
+                continue
+            static = _jit_call_info(node) if tail in _JIT_WRAPPERS \
+                else (set(), set())
+            for pos in _TRACE_CONSUMERS[tail]:
+                if pos >= len(node.args):
+                    continue
+                arg = node.args[pos]
+                if isinstance(arg, ast.Lambda):
+                    add(arg, *static)
+                elif isinstance(arg, ast.Name):
+                    for fn in defs.get(arg.id, []):
+                        add(fn, *static)
+    return roots
+
+
+class _TaintScope:
+    """Conservative intra-function tracer taint: which local names may
+    hold tracers at trace time."""
+
+    def __init__(self, tainted: Set[str]):
+        self.tainted = set(tainted)
+
+    def expr(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _SHAPE_ATTRS:
+                return False
+            return self.expr(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.expr(node.value) or self.expr(node.slice)
+        if isinstance(node, ast.Call):
+            tail = _attr_tail(node.func)
+            if tail == "len":
+                return False               # static under tracing
+            if isinstance(node.func, ast.Attribute):
+                root = _attr_root(node.func)
+                if root in _ARRAY_ROOTS:
+                    return True            # jnp./jax.lax. op -> tracer
+                return self.expr(node.func.value)   # x.sum() on a tracer
+            if tail == "range":
+                return any(self.expr(a) for a in node.args)
+            return False
+        if isinstance(node, (ast.BinOp,)):
+            return self.expr(node.left) or self.expr(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.expr(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` is a static structural check
+            # even when x may hold a tracer — identity against None is
+            # resolved at trace time, never on device values.
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) \
+                    and all(isinstance(c, ast.Constant) and c.value is None
+                            for c in node.comparators):
+                return False
+            return self.expr(node.left) or \
+                any(self.expr(c) for c in node.comparators)
+        if isinstance(node, ast.IfExp):
+            return (self.expr(node.body) or self.expr(node.test)
+                    or self.expr(node.orelse))
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.expr(node.value)
+        return False
+
+    def assign_target(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self.assign_target(elt, tainted)
+        elif isinstance(target, ast.Starred):
+            self.assign_target(target.value, tainted)
+
+
+def _fn_params(fn) -> List[Tuple[int, str, Optional[ast.AST]]]:
+    a = fn.args
+    params = [*a.posonlyargs, *a.args]
+    defaults: List[Optional[ast.AST]] = \
+        [None] * (len(params) - len(a.defaults)) + list(a.defaults)
+    out = [(i, p.arg, d) for i, (p, d) in enumerate(zip(params, defaults))]
+    out += [(None, p.arg, d)
+            for p, d in zip(a.kwonlyargs, a.kw_defaults)]
+    return out
+
+
+def _check_jit_body(fn, scope: _TaintScope, mod: ParsedModule,
+                    findings: List[Finding]) -> None:
+    def flag(node, msg):
+        findings.append(Finding(mod.rel, node.lineno, node.col_offset,
+                                "RPL001", msg))
+
+    def walk(stmts, scope):
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                inner = _TaintScope(scope.tainted)
+                for _, name, _ in _fn_params(st):
+                    inner.tainted.add(name)    # nested defs are traced too
+                walk(st.body, inner)
+                continue
+            for node in ast.walk(st):
+                if isinstance(node, ast.Call):
+                    tail = _attr_tail(node.func)
+                    if tail in ("int", "float", "bool") and node.args and \
+                            isinstance(node.func, ast.Name) and \
+                            scope.expr(node.args[0]):
+                        flag(node, f"`{tail}()` on a tracer-derived value "
+                                   "inside a jit-traced function forces a "
+                                   "trace-time concretization error or a "
+                                   "silent per-value retrace")
+                    if isinstance(node.func, ast.Attribute) and \
+                            node.func.attr == "item" and not node.args and \
+                            scope.expr(node.func.value):
+                        flag(node, "`.item()` on a tracer-derived value "
+                                   "inside a jit-traced function")
+            if isinstance(st, (ast.If, ast.While)):
+                if scope.expr(st.test):
+                    kind = "if" if isinstance(st, ast.If) else "while"
+                    flag(st, f"Python `{kind}` on a tracer-derived value "
+                             "inside a jit-traced function (use jnp.where/"
+                             "lax.cond, or hoist to a static arg)")
+                walk(st.body, scope)
+                walk(st.orelse, scope)
+            elif isinstance(st, ast.For):
+                if scope.expr(st.iter):
+                    flag(st, "Python `for` over a tracer-derived value "
+                             "inside a jit-traced function (loop bounds "
+                             "must be static; use lax.scan/fori_loop)")
+                walk(st.body, scope)
+                walk(st.orelse, scope)
+            elif isinstance(st, (ast.Assign,)):
+                tainted = scope.expr(st.value)
+                for t in st.targets:
+                    scope.assign_target(t, tainted)
+            elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                scope.assign_target(st.target, scope.expr(st.value))
+            elif isinstance(st, ast.AugAssign):
+                if scope.expr(st.value):
+                    scope.assign_target(st.target, True)
+            elif isinstance(st, (ast.With,)):
+                walk(st.body, scope)
+            elif isinstance(st, ast.Try):
+                walk(st.body, scope)
+                for h in st.handlers:
+                    walk(h.body, scope)
+                walk(st.orelse, scope)
+                walk(st.finalbody, scope)
+
+    walk(fn.body if not isinstance(fn, ast.Lambda) else [], scope)
+
+
+def rule_rpl001(mod: ParsedModule, ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    for root in _collect_jit_roots(mod):
+        fn = root.fn
+        if isinstance(fn, ast.Lambda):
+            continue                      # no statements to mis-branch on
+        tainted: Set[str] = set()
+        for pos, name, default in _fn_params(fn):
+            static = name in root.static_names or \
+                (pos is not None and pos in root.static_nums)
+            if static:
+                if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                    findings.append(Finding(
+                        mod.rel, default.lineno, default.col_offset,
+                        "RPL001",
+                        f"static jit arg `{name}` has a non-hashable "
+                        "(mutable) default: jit static args must be "
+                        "hashable or every call re-traces"))
+            else:
+                tainted.add(name)
+        _check_jit_body(fn, _TaintScope(tainted), mod, findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPL002 — kernel contract (global rule)
+# ---------------------------------------------------------------------------
+
+_KERNEL_EXEMPT = {"policy", "ref", "ops", "__init__"}
+
+
+def _load_registry(policy_mod: ParsedModule):
+    for node in ast.walk(policy_mod.tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "KERNEL_REGISTRY":
+                    try:
+                        return ast.literal_eval(node.value), node.lineno
+                    except ValueError:
+                        return None, node.lineno
+    return None, 1
+
+
+def _module_has(mod: ParsedModule, pred) -> bool:
+    return any(pred(n) for n in ast.walk(mod.tree))
+
+
+def rule_rpl002(ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    ref_defs_cache: Dict[pathlib.Path, Set[str]] = {}
+
+    def sibling(mod: ParsedModule, stem: str) -> Optional[ParsedModule]:
+        path = mod.path.parent / f"{stem}.py"
+        key = str(path)
+        if key in ctx.modules:
+            return ctx.modules[key]
+        if path.exists():
+            from repro.analysis.core import parse_file
+            return parse_file(path, ctx.root)
+        return None
+
+    for mod in list(ctx.modules.values()):
+        if mod.path.parent.name != "kernels" or \
+                mod.path.stem in _KERNEL_EXEMPT:
+            continue
+        calls = [n for n in ast.walk(mod.tree)
+                 if isinstance(n, ast.Call)
+                 and _attr_tail(n.func) == "pallas_call"]
+        if not calls:
+            continue
+        at = calls[0]
+        policy = sibling(mod, "policy")
+        if policy is None:
+            findings.append(Finding(mod.rel, at.lineno, at.col_offset,
+                                    "RPL002",
+                                    "pallas_call with no kernels/policy.py "
+                                    "to hold the KERNEL_REGISTRY entry"))
+            continue
+        registry, reg_line = _load_registry(policy)
+        if registry is None:
+            findings.append(Finding(policy.rel, reg_line, 0, "RPL002",
+                                    "KERNEL_REGISTRY missing or not a pure "
+                                    "dict literal in kernels/policy.py"))
+            continue
+        entry = registry.get(mod.path.stem)
+        if entry is None:
+            findings.append(Finding(
+                mod.rel, at.lineno, at.col_offset, "RPL002",
+                f"pallas_call site `{mod.path.stem}` has no "
+                "KERNEL_REGISTRY entry in kernels/policy.py (every "
+                "kernel needs a ref twin + interpret-parity test)"))
+            continue
+        missing = {"ref", "test", "shape_guard"} - set(entry)
+        if missing:
+            findings.append(Finding(
+                policy.rel, reg_line, 0, "RPL002",
+                f"KERNEL_REGISTRY[{mod.path.stem!r}] missing keys: "
+                f"{sorted(missing)}"))
+            continue
+        ref_mod = sibling(mod, "ref")
+        ref_path = mod.path.parent / "ref.py"
+        if ref_path not in ref_defs_cache:
+            ref_defs_cache[ref_path] = set() if ref_mod is None else {
+                n.name for n in ast.walk(ref_mod.tree)
+                if isinstance(n, ast.FunctionDef)}
+        refs = entry["ref"] if isinstance(entry["ref"], (list, tuple)) \
+            else [entry["ref"]]
+        for ref_name in refs:
+            if ref_name not in ref_defs_cache[ref_path]:
+                findings.append(Finding(
+                    mod.rel, at.lineno, at.col_offset, "RPL002",
+                    f"registered ref twin `{ref_name}` is not defined in "
+                    "kernels/ref.py"))
+        test_path = ctx.root / entry["test"]
+        if not test_path.exists():
+            findings.append(Finding(
+                mod.rel, at.lineno, at.col_offset, "RPL002",
+                f"registered parity test `{entry['test']}` does not exist"))
+        else:
+            text = test_path.read_text()
+            if mod.path.stem not in text and \
+                    not any(r in text for r in refs):
+                findings.append(Finding(
+                    mod.rel, at.lineno, at.col_offset, "RPL002",
+                    f"parity test `{entry['test']}` references neither "
+                    f"`{mod.path.stem}` nor its ref twin"))
+        guard = entry["shape_guard"]
+        if guard == "checked":
+            if not _module_has(mod, lambda n: isinstance(n, ast.Mod)):
+                findings.append(Finding(
+                    mod.rel, at.lineno, at.col_offset, "RPL002",
+                    "shape_guard declared 'checked' but the module has no "
+                    "divisibility (%) check guarding its grid/BlockSpec "
+                    "assumptions"))
+        elif not (isinstance(guard, str) and guard.startswith("fallback:")):
+            findings.append(Finding(
+                policy.rel, reg_line, 0, "RPL002",
+                f"KERNEL_REGISTRY[{mod.path.stem!r}] shape_guard must be "
+                "'checked' or a documented 'fallback: ...' note"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPL003 — engine-state aliasing
+# ---------------------------------------------------------------------------
+
+# attributes holding (or caching) engine/slot state arrays
+_STATE_ATTRS = {"result", "_slot_bufs", "_beam", "_stream_state", "_gen",
+                "_tokens", "cache"}
+# engine receivers state may hang off
+_ENGINE_NAMES = {"self", "eng", "engine", "sess", "session"}
+# engine methods whose return values are materialized views over
+# engine-owned buffers: callers must route them through copy_result
+_READOUT_CALLS = {"slot_best"}
+# calls that SANITIZE (deep-copy) a tainted payload
+_SANITIZERS = {"copy_result", "deepcopy", "list", "jsonable", "copy"}
+
+
+def _receiver_ok(node: ast.AST) -> bool:
+    root = _attr_root(node)
+    return root in _ENGINE_NAMES or (
+        isinstance(node, ast.Attribute) and "engine" in node.attr)
+
+
+class _AliasScope(_TaintScope):
+    def expr(self, node: ast.AST) -> bool:       # noqa: C901 - small DFA
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATE_ATTRS and _receiver_ok(node.value):
+                return True
+            return self.expr(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.expr(node.value)
+        if isinstance(node, ast.Call):
+            tail = _attr_tail(node.func)
+            if tail in _SANITIZERS:
+                return False
+            if tail in _READOUT_CALLS:
+                return True
+            if tail == "dict":                   # shallow: aliasing survives
+                return any(self.expr(a) for a in node.args) or \
+                    any(self.expr(kw.value) for kw in node.keywords)
+            return False
+        if isinstance(node, ast.Dict):
+            return any(v is not None and self.expr(v) for v in node.values)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.expr(node.body) or self.expr(node.orelse)
+        if isinstance(node, ast.BoolOp):
+            return any(self.expr(v) for v in node.values)
+        return False
+
+
+def rule_rpl003(mod: ParsedModule, ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        scope = _AliasScope(set())
+        for st in ast.walk(fn):
+            if isinstance(st, ast.Assign):
+                tainted = scope.expr(st.value)
+                for t in st.targets:
+                    scope.assign_target(t, tainted)
+            elif isinstance(st, ast.Return) and st.value is not None:
+                if scope.expr(st.value):
+                    findings.append(Finding(
+                        mod.rel, st.lineno, st.col_offset, "RPL003",
+                        f"`{fn.name}` returns a payload aliasing engine "
+                        "slot state without routing through copy_result "
+                        "(caller mutation corrupts, or read-only views "
+                        "escape, the engine's stored results)"))
+            elif isinstance(st, ast.Call) and \
+                    _attr_tail(st.func) == "set_result" and st.args and \
+                    scope.expr(st.args[0]):
+                findings.append(Finding(
+                    mod.rel, st.lineno, st.col_offset, "RPL003",
+                    "future resolved with a payload aliasing engine slot "
+                    "state: route it through copy_result first"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPL004 — thread discipline
+# ---------------------------------------------------------------------------
+
+def rule_rpl004(mod: ParsedModule, ctx: Context) -> List[Finding]:
+    if not ctx.worker_only_names:
+        return []
+    findings: List[Finding] = []
+
+    def scan(node: ast.AST, in_lambda: bool):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.Lambda):
+                scan(child, True)
+                continue
+            if isinstance(child, ast.Call) and not in_lambda:
+                tail = _attr_tail(child.func)
+                if isinstance(child.func, ast.Attribute) and \
+                        tail in ctx.worker_only_names:
+                    findings.append(Finding(
+                        mod.rel, child.lineno, child.col_offset, "RPL004",
+                        f"@worker_only engine method `{tail}` called from "
+                        "an asyncio handler: only the engine's "
+                        "EngineWorker thread may drive it — submit a "
+                        "thunk via worker.call/submit instead"))
+            scan(child, in_lambda)
+
+    for fn in ast.walk(mod.tree):
+        if isinstance(fn, ast.AsyncFunctionDef):
+            scan(fn, False)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPL005 — RNG discipline
+# ---------------------------------------------------------------------------
+
+def rule_rpl005(mod: ParsedModule, ctx: Context) -> List[Finding]:
+    calls = [n for n in ast.walk(mod.tree) if isinstance(n, ast.Call)]
+    has_out_shardings = any(
+        any(kw.arg in ("out_shardings", "in_shardings")
+            for kw in c.keywords) and _attr_tail(c.func) in _JIT_WRAPPERS
+        for c in calls)
+    if not has_out_shardings:
+        return []
+    key_calls = [c for c in calls if _attr_tail(c.func) == "PRNGKey"]
+    if not key_calls:
+        return []
+    if any(_attr_tail(c.func) == "mesh_invariant_rng" for c in calls):
+        return []
+    return [Finding(
+        mod.rel, c.lineno, c.col_offset, "RPL005",
+        "PRNGKey in a module that jits with out_shardings but never "
+        "calls mesh_invariant_rng(): legacy threefry makes the generated "
+        "values depend on the mesh, so elastic restarts on a different "
+        "topology silently fork the trajectory (PR 5 bug)")
+        for c in key_calls]
+
+
+PER_FILE_RULES = {
+    "RPL001": rule_rpl001,
+    "RPL003": rule_rpl003,
+    "RPL004": rule_rpl004,
+    "RPL005": rule_rpl005,
+}
+
+GLOBAL_RULES = {
+    "RPL002": rule_rpl002,
+}
+
+
+def iter_rule_codes() -> Iterable[str]:
+    yield from PER_FILE_RULES
+    yield from GLOBAL_RULES

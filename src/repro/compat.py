@@ -32,7 +32,7 @@ def __getattr__(name):
     if name == "CompilerParams":
         from jax.experimental.pallas import tpu as pltpu
         cp = getattr(pltpu, "CompilerParams", None) \
-            or getattr(pltpu, "TPUCompilerParams")
+            or pltpu.TPUCompilerParams
         globals()[name] = cp                       # cache for next lookup
         return cp
     raise AttributeError(name)

@@ -4,7 +4,6 @@ from repro.configs import (  # noqa: F401
     llama4_maverick_400b_a17b,
     qwen2_moe_a27b,
     qwen2_72b,
-    deepseek_coder_33b,
     h2o_danube_18b,
     chatglm3_6b,
     qwen2_vl_7b,

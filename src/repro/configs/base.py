@@ -244,7 +244,6 @@ ASSIGNED_ARCHS = (
     "llama4-maverick-400b-a17b",
     "qwen2-moe-a2.7b",
     "qwen2-72b",
-    "deepseek-coder-33b",
     "h2o-danube-1.8b",
     "chatglm3-6b",
     "qwen2-vl-7b",

@@ -54,7 +54,7 @@ class BeamState(NamedTuple):
 def init_state(k: int, lm: BigramLM) -> BeamState:
     def full(v, dt=jnp.float32):
         return jnp.full((k,), v, dt)
-    st = BeamState(
+    return BeamState(
         hash=jnp.zeros((k,), jnp.int32).at[0].set(1),
         pb=full(NEG_INF).at[0].set(0.0),
         pnb=full(NEG_INF),
@@ -66,7 +66,6 @@ def init_state(k: int, lm: BigramLM) -> BeamState:
         words=jnp.full((k, MAX_WORDS), -1, jnp.int32),
         n_words=jnp.zeros((k,), jnp.int32),
     )
-    return st
 
 
 def _append(arr, n, val):

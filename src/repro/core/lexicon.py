@@ -39,7 +39,7 @@ def build_lexicon(words: Dict[str, Sequence[int]], max_children: int) -> Lexicon
     """words: word -> token-id sequence. Word ids = insertion order."""
     children: List[Dict[int, int]] = [{}]
     word_id: List[int] = [-1]
-    for wid, (word, toks) in enumerate(words.items()):
+    for wid, (_word, toks) in enumerate(words.items()):
         node = 0
         for t in toks:
             nxt = children[node].get(t)

@@ -34,6 +34,7 @@ from repro.core.stepplan import (PlannedKernel, StepPlan,  # noqa: F401
                                  make_step_plan)
 from repro.serving import AsrEngine, AsrProgram, EngineConfig
 from repro.serving.asr import empty_hypothesis
+from repro.serving.engine import copy_result
 
 
 class ASRPU:
@@ -123,10 +124,14 @@ class ASRPU:
 
     @property
     def _beam(self):
+        # intentional raw exposure: parity tests introspect the live
+        # beam; callers never mutate it (jax arrays are immutable)
+        # repro-lint: disable=RPL003
         return self._engine._beam if self._engine is not None else None
 
     @property
     def _stream_state(self):
+        # repro-lint: disable=RPL003  (same intentional exposure)
         return (self._engine._stream_state
                 if self._engine is not None else None)
 
@@ -149,7 +154,7 @@ class ASRPU:
         utterance-final word (call when the utterance is known to end)."""
         if self._engine is None:
             return empty_hypothesis()
-        return self._engine.slot_best(0, final=final)
+        return copy_result(self._engine.slot_best(0, final=final))
 
 
 class MultiStreamASRPU(ASRPU):
@@ -193,7 +198,7 @@ class MultiStreamASRPU(ASRPU):
         """Best hypothesis of stream `slot` (see ASRPU.best)."""
         if self._engine is None:
             return empty_hypothesis()
-        return self._engine.slot_best(slot, final=final)
+        return copy_result(self._engine.slot_best(slot, final=final))
 
     def serve(self, utterances) -> List[dict]:
         """Continuous batching over whole utterances (audio arrays);

@@ -48,7 +48,7 @@ def hypothesis_unit_pallas(key_s, pb_s, pnb_s, *, k, beam, interpret=False):
     (pos, pb, pnb, valid) each (B, k); `pos` indexes the sorted row."""
     B, N = key_s.shape
     row = lambda b: (b, 0)
-    out = pl.pallas_call(
+    return pl.pallas_call(
         functools.partial(_kernel, k=k, beam=float(beam)),
         grid=(B,),
         in_specs=[pl.BlockSpec((1, N), row)] * 3,
@@ -60,4 +60,3 @@ def hypothesis_unit_pallas(key_s, pb_s, pnb_s, *, k, beam, interpret=False):
                    jax.ShapeDtypeStruct((B, k), jnp.int32)),
         interpret=interpret,
     )(key_s, pb_s, pnb_s)
-    return out

@@ -68,3 +68,52 @@ DEFAULT_POLICY = KernelPolicy()
 
 def resolve(policy: KernelPolicy | None, *, hot: bool = False) -> str:
     return (policy if policy is not None else DEFAULT_POLICY).resolve(hot=hot)
+
+
+# Kernel contract registry, consumed by `python -m repro.analysis`
+# (rule RPL002): every module under kernels/ with a `pl.pallas_call`
+# site declares its ref.py twin, the interpret-parity test that pins
+# kernel==ref, and how its grid/BlockSpec divisibility assumption is
+# handled — "checked" means the module itself guards it with a
+# divisibility check (assert / pad / tile-halving), "fallback: ..."
+# documents why no in-module check is needed.  Must stay a pure dict
+# literal: the analyzer reads it with ast.literal_eval, never imports.
+KERNEL_REGISTRY = {
+    "tds_conv": {
+        "ref": ["tds_conv", "tds_conv_fused"],
+        "test": "tests/test_kernels.py",
+        "shape_guard": "checked",   # stride assert + bt halved to divide
+    },
+    "layernorm": {
+        "ref": ["layernorm", "rmsnorm"],
+        "test": "tests/test_kernels.py",
+        "shape_guard": "checked",   # rows padded to the bt tile
+    },
+    "logmel": {
+        "ref": "logmel",
+        "test": "tests/test_kernels.py",
+        "shape_guard": "checked",   # frames padded to the bt tile
+    },
+    "flash_attention": {
+        "ref": "flash_attention",
+        "test": "tests/test_kernels.py",
+        "shape_guard": "checked",   # asserts Sq/Sk divisible by blocks
+    },
+    "beam_prune": {
+        "ref": "beam_prune",
+        "test": "tests/test_kernels.py",
+        "shape_guard": "checked",   # candidates padded to the bn tile
+    },
+    "int8_matmul": {
+        "ref": "int8_matmul",
+        "test": "tests/test_kernels.py",
+        "shape_guard": "checked",   # bm/bn/bk asserted or halved to fit
+    },
+    "hypothesis_unit": {
+        "ref": ["hypothesis_unit", "merge_select_sorted"],
+        "test": "tests/test_hypothesis_unit.py",
+        "shape_guard": "fallback: callers route through "
+                       "ops._hypothesis_unit, which pads candidate rows "
+                       "to a multiple of 128 before the pallas_call",
+    },
+}

@@ -273,10 +273,8 @@ def analyze_hlo(hlo: str, default_group: int) -> Cost:
         return total
 
     out = Cost()
-    for e in entries:
-        # heuristically, the real entry is the largest root computation
-        pass
     if entries:
+        # heuristically, the real entry is the largest root computation
         best = max(entries, key=lambda e: len(comps[e]))
         out = cost_of(best)
     return out

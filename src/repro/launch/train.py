@@ -98,17 +98,20 @@ def main(argv=None):
             return jstep(state, batch)
 
         def log(step, metrics, dt):
-            loss = float(metrics["loss"])
-            losses.append(loss)
+            # keep the device array: float() here would block on the
+            # async dispatch EVERY step, serializing host and device —
+            # coerce only at the log boundary (and once at the end)
+            losses.append(metrics["loss"])
             if (step + 1) % args.log_every == 0:
-                print(f"step {step+1} loss {loss:.4f} ({dt*1e3:.0f} ms)",
-                      flush=True)
+                print(f"step {step+1} loss {float(losses[-1]):.4f} "
+                      f"({dt*1e3:.0f} ms)", flush=True)
 
         t0 = time.time()
         state, stats = fault.run_resilient(
             one_step, state, start, args.steps, checkpointer=ckpt,
             ckpt_every=args.ckpt_every, watchdog=fault.StepWatchdog(),
             heartbeat=None, on_metrics=log)
+        losses[:] = [float(v) for v in losses]
         dt = time.time() - t0
         print(f"done: {args.steps} steps in {dt:.1f}s; "
               f"loss {losses[0]:.4f} -> {losses[-1]:.4f}; stats={stats}")

@@ -249,8 +249,7 @@ def attention_chunked(q, k, v, qpos, kpos, *, causal=True,
                 jnp.zeros((B, K, G, cq), jnp.float32),
                 jnp.zeros((B, K, G, cq, D), jnp.float32))
         (m_f, l_f, acc), _ = lax.scan(kv_step, init, (kc, vc, kp))
-        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
-        return out  # (B,K,G,cq,D)
+        return acc / jnp.maximum(l_f, 1e-30)[..., None]  # (B,K,G,cq,D)
 
     outs = lax.map(q_block, (qg, qp))                      # nq,B,K,G,cq,D
     if sharder is not None:

@@ -21,7 +21,7 @@ def init_mamba(key, d_model: int, spec: SSMSpec, dtype=jnp.bfloat16) -> dict:
     nh = spec.n_heads(d_model)
     gn = spec.ngroups * spec.d_state
     ks = jax.random.split(key, 8)
-    p = {
+    return {
         "w_z": layers.init_linear(ks[0], d_model, di, dtype=dtype),
         "w_x": layers.init_linear(ks[1], d_model, di, dtype=dtype),
         "w_B": layers.init_linear(ks[2], d_model, gn, dtype=dtype),
@@ -36,7 +36,6 @@ def init_mamba(key, d_model: int, spec: SSMSpec, dtype=jnp.bfloat16) -> dict:
         "norm_gate": {"scale": jnp.ones((di,), jnp.float32)},
         "out_proj": layers.init_linear(ks[6], di, d_model, dtype=dtype),
     }
-    return p
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,

@@ -61,8 +61,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_micro, mesh: Mesh,
 
         (buf, outs), _ = lax.scan(step, (buf, outs), jnp.arange(steps))
         # gather last stage's outputs to all (replicated output contract)
-        outs = lax.psum(jnp.where(sid == n_stages - 1, outs, 0.0), axis)
-        return outs
+        return lax.psum(jnp.where(sid == n_stages - 1, outs, 0.0), axis)
 
     fn = compat.shard_map(
         per_stage, mesh=mesh,

@@ -70,8 +70,10 @@ import numpy as np
 from repro.core import decoder as dec
 from repro.core import features
 from repro.models import tds
+from repro.analysis.guards import no_implicit_transfers
 from repro.serving.config import AsrProgram, EngineConfig
-from repro.serving.engine import Engine, Session, copy_result
+from repro.serving.engine import (Engine, Session, copy_result,
+                                 worker_only)
 
 
 def empty_hypothesis() -> dict:
@@ -279,6 +281,7 @@ class AsrEngine(Engine):
         """A full window of whole frames buffered."""
         return self.slot_windows(slot) >= 1
 
+    @worker_only
     def _step(self) -> bool:
         """One fused decoding step over a gathered sub-batch.  The
         scheduler picks the step bucket `w` retiring the most buffered
@@ -309,9 +312,13 @@ class AsrEngine(Engine):
             self._slot_bufs[s] = self._slot_bufs[s][w * self._spp:]
         batch[len(slots):] = batch[0]      # bucket padding: duplicate rows
         idx = np.array(slots + slots[:1] * (b - len(slots)), np.int32)
-        self._stream_state, self._beam = self._jit_step(
-            self.params, self._prepared, self._stream_state, self._beam,
-            jnp.asarray(batch), jnp.asarray(idx))
+        # transfer-guarded: the batch/idx uploads are the ONLY intended
+        # host->device traffic per step; anything implicit (a stray
+        # numpy weight, a scalar readback inside dispatch) is a bug
+        with no_implicit_transfers():
+            self._stream_state, self._beam = self._jit_step(
+                self.params, self._prepared, self._stream_state, self._beam,
+                jnp.asarray(batch), jnp.asarray(idx))
         self._slot_steps[slots] += w
         self.n_steps += 1
         self.step_shapes.append((len(slots), b, w))
@@ -374,9 +381,12 @@ class AsrEngine(Engine):
         if session.done:
             return copy_result(session.result)
         if session.admitted:
+            # slot_best materializes zero-copy views over the jitted
+            # readout's device buffers: copy so the caller owns a
+            # writable result (and can't see a later step through it)
             res = self.slot_best(session.slot)
             res["steps"] = int(self._slot_steps[session.slot])
-            return res
+            return copy_result(res)
         return self._empty_result()
 
     def _empty_result(self) -> dict:
@@ -399,7 +409,7 @@ class AsrEngine(Engine):
         self._ensure_state()   # finish() before any step still finalizes
         res = self.slot_best(slot, final=True)
         res["steps"] = int(self._slot_steps[slot])
-        return res
+        return copy_result(res)   # stored as session.result: must own it
 
     # ---- whole-utterance convenience ---------------------------------
     def serve(self, utterances) -> List[dict]:

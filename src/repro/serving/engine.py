@@ -30,11 +30,36 @@ Subclasses implement the slot mechanics:
 """
 from __future__ import annotations
 
+import functools
+import threading
 from typing import Iterator, List, Optional
 
 import numpy as np
 
 from repro.serving.metrics import EngineMetrics
+
+
+def worker_only(method):
+    """Marks an engine method that mutates pool state (the admit ->
+    step -> harvest pump and reset): when the engine is owned by an
+    `EngineWorker` thread (`_owner_thread` set), calling it from any
+    other thread raises instead of racing the pump.  In-process use
+    (tests, launchers, `Session.poll` driving `_advance`) has no owner
+    thread and is unaffected.  `python -m repro.analysis` (rule RPL004)
+    statically rejects calls to annotated methods from asyncio handlers
+    outside a worker submit/call thunk."""
+    @functools.wraps(method)
+    def wrapper(self, *args, **kwargs):
+        owner = getattr(self, "_owner_thread", None)
+        if owner is not None and threading.current_thread() is not owner:
+            raise RuntimeError(
+                f"{type(self).__name__}.{method.__name__} called from "
+                f"thread {threading.current_thread().name!r}, but the "
+                f"engine is owned by worker thread {owner.name!r}: "
+                "submit a thunk through the EngineWorker instead")
+        return method(self, *args, **kwargs)
+    wrapper._worker_only = True
+    return wrapper
 
 
 class AdmissionRejected(RuntimeError):
@@ -173,6 +198,7 @@ class Engine:
         self._queue = SessionQueue()
         self._owner: List[Optional[Session]] = [None] * self.n_slots
         self._next_sid = 0
+        self._owner_thread = None      # set by EngineWorker (see worker_only)
         self.metrics = EngineMetrics()
 
     # ---- session front-end -------------------------------------------
@@ -201,6 +227,7 @@ class Engine:
         raise NotImplementedError
 
     # ---- the serve loop ----------------------------------------------
+    @worker_only
     def _advance(self) -> None:
         """Admit -> step -> harvest until no progress is possible."""
         progressed = True
@@ -209,6 +236,7 @@ class Engine:
             progressed |= self._step()
             progressed |= self._harvest()
 
+    @worker_only
     def _admit(self) -> bool:
         did = False
         for slot in range(self.n_slots):
@@ -228,6 +256,7 @@ class Engine:
             self.metrics.sample_queue_depth(len(self._queue))
         return did
 
+    @worker_only
     def _harvest(self) -> bool:
         did = False
         for slot, sess in enumerate(self._owner):
@@ -250,6 +279,7 @@ class Engine:
             self.metrics.sample_queue_depth(len(self._queue))
         return did
 
+    @worker_only
     def reset(self) -> None:
         """Drop all sessions (queued and active) and zero the pool.
         Dropped sessions are detached: their handles raise on further

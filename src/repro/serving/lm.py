@@ -33,8 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import LM
+from repro.analysis.guards import no_implicit_transfers
 from repro.serving.config import EngineConfig, LmProgram
-from repro.serving.engine import Engine, Session, copy_result
+from repro.serving.engine import (Engine, Session, copy_result,
+                                 worker_only)
 
 
 class LmEngine(Engine):
@@ -108,6 +110,7 @@ class LmEngine(Engine):
                 return b
         return self._buckets[-1]   # unreachable: validate_prompt caps plen
 
+    @worker_only
     def _admit(self) -> bool:
         """Admit every admissible queued session into the free slots,
         grouped by prompt-length bucket: one masked multi-row prefill
@@ -176,13 +179,15 @@ class LmEngine(Engine):
         # the padded prefill batch is one dispatch of n_slots rows
         self.metrics.on_step(len(group), self.n_slots)
 
+    @worker_only
     def _step(self) -> bool:
         live = [s for s in range(self.n_slots)
                 if self._owner[s] is not None and self._rem[s] > 0]
         if not live:
             return False
-        _, tok, self.cache = self._jit_decode(self.params, self.cache,
-                                              {"tokens": self._tokens})
+        with no_implicit_transfers():   # decode inputs live on device
+            _, tok, self.cache = self._jit_decode(
+                self.params, self.cache, {"tokens": self._tokens})
         self._tokens = tok[:, None]
         self.n_steps += 1
         self.metrics.on_step(len(live), self.n_slots)

@@ -153,6 +153,9 @@ class EngineWorker:
         self._stopping = threading.Event()
         self._thread = threading.Thread(target=self._run, name=name,
                                         daemon=True)
+        # claim the engine: @worker_only methods now refuse every other
+        # thread (claimed before start so no pump can beat the claim)
+        engine._owner_thread = self._thread
         self._thread.start()
 
     # -- submission (any thread) --
@@ -176,6 +179,8 @@ class EngineWorker:
     def close(self, timeout: float = 5.0) -> None:
         self._stopping.set()
         self._thread.join(timeout=timeout)
+        if not self._thread.is_alive():
+            self.engine._owner_thread = None   # release for in-process use
 
     # -- the loop (worker thread only) --
     def _run(self) -> None:
@@ -248,9 +253,12 @@ def _asr_readout(session) -> dict:
     if session.done:
         return copy_result(session.result)
     if session.admitted:
+        # same contract as AsrEngine._poll: slot_best hands back
+        # zero-copy (read-only) views over engine-owned buffers, so the
+        # payload must be copied before it leaves the engine
         res = eng.slot_best(session.slot)
         res["steps"] = int(eng._slot_steps[session.slot])
-        return res
+        return copy_result(res)
     return eng._empty_result()
 
 

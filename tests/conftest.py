@@ -18,3 +18,14 @@ _hypothesis_shim.install()
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)
+
+
+@pytest.fixture
+def compile_budget():
+    """`repro.analysis.guards.compilation_budget` as a fixture: wrap a
+    block in `with compile_budget(n):` to pin at most n fresh XLA
+    compiles inside it (n=0 pins "fully warmed, no retraces").  Counts
+    real backend compiles via jax.monitoring, so tracing-cache hits are
+    free and the budget survives jit internals changing."""
+    from repro.analysis.guards import compilation_budget
+    return compilation_budget

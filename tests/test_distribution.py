@@ -166,13 +166,13 @@ def test_input_specs_cover_all_cells():
             if shape.is_decode:
                 key = "tokens" if cfg.embed_inputs else "embeds"
                 assert specs[key].shape[1] == 1
-    assert n == 33   # 10*3 + 3 long_500k (sub-quadratic archs)
+    assert n == 30   # 9*3 + 3 long_500k (sub-quadratic archs)
 
 
 def test_long_500k_skips_documented():
     skips = [(a, s.name) for a in ASSIGNED_ARCHS
              for s in get_config(a).skipped_shapes()]
-    assert len(skips) == 7
+    assert len(skips) == 6
     assert all(s == "long_500k" for _, s in skips)
     assert ("mamba2-1.3b", "long_500k") not in skips
     assert ("jamba-v0.1-52b", "long_500k") not in skips

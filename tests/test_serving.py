@@ -526,11 +526,13 @@ def test_lm_swa_ring_cache_admission():
         assert tokens == ref
 
 
-def test_lm_bucketed_prefill_bounds_jit_entries():
+def test_lm_bucketed_prefill_bounds_jit_entries(compile_budget):
     """Staggered admissions with MANY distinct prompt lengths compile at
     most len(program.buckets()) prefill jit entries (pad-to-bucket +
     batch padded to n_slots), and every token stream still equals its
-    dedicated single-slot decode."""
+    dedicated single-slot decode.  Pinned with the compilation-budget
+    fixture: once every bucket is warmed, a second wave of NEW lengths
+    mapping into the same buckets must compile NOTHING."""
     cfg = get_config("chatglm3-6b").tiny()
     params = LM(cfg).init(jax.random.PRNGKey(0))
     program = LmProgram(cfg, cache_len=24, max_new=6)
@@ -547,10 +549,12 @@ def test_lm_bucketed_prefill_bounds_jit_entries():
         assert tokens == ref
         assert len(tokens) == program.max_new
 
-    entries = engine.prefill_cache_entries()
-    if entries is None:      # private jax jit-cache introspection gone
-        pytest.skip("this jax version does not expose the jit cache size")
-    assert entries <= len(program.buckets()), entries
+    # new lengths, same buckets: 4,6 -> 8; 10 -> 16; 17 -> 32
+    # (17 is the longest fresh length fitting cache_len - max_new = 18)
+    with compile_budget(0, "warmed bucketed LM serve"):
+        again = engine.serve([rng.integers(1, cfg.vocab_size, n)
+                              for n in (4, 6, 10, 17)])
+    assert all(len(t) == program.max_new for t in again)
 
 
 @pytest.mark.parametrize("arch", ["chatglm3-6b", "mamba2-1.3b",
@@ -683,7 +687,7 @@ def test_lm_per_slot_cache_matches_scalar_cache():
     gen = {0: [], 1: []}
     for slot, prompt in ((0, pA), (1, pB)):
         logits, pc = lm.prefill(params, {"tokens": jnp.asarray(prompt)[None]})
-        cache["layers"] = jax.tree.map(lambda d, s: put(d, s, slot),
+        cache["layers"] = jax.tree.map(lambda d, s, slot=slot: put(d, s, slot),
                                        cache["layers"], pc["layers"])
         L = len(prompt)
         row = jnp.full((Sc,), -1, jnp.int32).at[:L].set(jnp.arange(L))

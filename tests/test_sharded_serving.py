@@ -85,6 +85,24 @@ def test_mesh_1_shard_map_wrapper_matches_unsharded():
         assert abs(ra["score"] - rb["score"]) < 1e-5
 
 
+def test_warmed_engine_serves_under_zero_compile_budget(compile_budget):
+    """A warmed engine re-serving the same workload (same slot/window
+    buckets) must compile NOTHING: the gathered sub-batch step is
+    shape-stable across waves, so a retrace here means a (b, w) bucket
+    or readout shape silently varied."""
+    engine, words = asr_demo_engine(2)
+    utts = _utts(words, 2)
+    first = engine.serve(utts)
+    engine.serve(utts)      # wave 2 also warms the slot-reset path
+    # (re-admission resets slots; wave 1 ran on fresh state and never
+    # compiled reset, so only wave 3 runs with everything warmed)
+    with compile_budget(0, "warmed AsrEngine.serve wave"):
+        again = engine.serve(utts)
+    for ra, rb in zip(first, again):
+        assert ra["words"].tolist() == rb["words"].tolist()
+        assert ra["tokens"].tolist() == rb["tokens"].tolist()
+
+
 # ---------------------------------------------------------------------------
 # slot-gather scheduling (the batched-serve regression fix)
 # ---------------------------------------------------------------------------

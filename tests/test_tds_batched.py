@@ -35,11 +35,11 @@ def test_forward_batched_bitexact_vs_per_slot_forward():
     st = _warm_state(params, B)
     logp_b, ns_b = tds.forward_batched(params, TINY_TDS, feats, st)
     for i in range(B):
-        st_i = jax.tree.map(lambda a: a[i], st)
+        st_i = jax.tree.map(lambda a, i=i: a[i], st)
         logp_i, ns_i = tds.forward(params, TINY_TDS, feats[i], st_i)
         np.testing.assert_array_equal(np.asarray(logp_b[i]),
                                       np.asarray(logp_i))
-        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        jax.tree.map(lambda a, b, i=i: np.testing.assert_array_equal(
             np.asarray(a[i]), np.asarray(b)), ns_b, ns_i)
 
 
@@ -55,6 +55,28 @@ def test_forward_batched_matches_vmap_forward():
         lambda f, s: tds.forward(params, TINY_TDS, f, s))(feats, st)
     np.testing.assert_allclose(np.asarray(logp_b), np.asarray(logp_v),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_forward_batched_compilation_budget(compile_budget):
+    """One jit entry serves repeated batched forwards: the first call
+    compiles (the counter must see it), then fresh same-shape inputs
+    run under a ZERO compile budget — any retrace means the batched
+    forward bakes a data-dependent shape into its trace."""
+    from repro.analysis.guards import count_compilations
+    params = tds.init_tds(jax.random.PRNGKey(0), TINY_TDS)
+    B = 2
+    st = _warm_state(params, B, seed=5)
+    step = jax.jit(lambda f, s: tds.forward_batched(params, TINY_TDS, f, s))
+    feats = jax.random.normal(jax.random.PRNGKey(6), (B, 8, 16))
+    with count_compilations() as warm:
+        logp, st2 = step(feats, st)
+        jax.block_until_ready(logp)
+    assert warm.count >= 1, "counter missed the warmup compile"
+    feats2 = jax.random.normal(jax.random.PRNGKey(7), (B, 8, 16))
+    with compile_budget(0, "warmed tds.forward_batched"):
+        logp2, _ = step(feats2, st2)
+        jax.block_until_ready(logp2)
+    assert logp2.shape == logp.shape
 
 
 def test_prepared_int8_bitexact_vs_on_the_fly():
