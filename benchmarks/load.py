@@ -38,8 +38,14 @@ import numpy as np
 ROWS = {}
 
 
-def row(name: str, value: float, unit: str = ""):
-    ROWS[name] = round(float(value), 4)
+def row(name: str, value, unit: str = ""):
+    # integer counters (stream/slot/queue-depth counts) round-trip as
+    # JSON ints — emitting them as 8.0/100.0 made compare.py --load
+    # diffs format-drift against hand-read baselines
+    if isinstance(value, (int, np.integer)) and not isinstance(value, bool):
+        ROWS[name] = int(value)
+    else:
+        ROWS[name] = round(float(value), 4)
     print(f"{name},{ROWS[name]}{',' + unit if unit else ''}", flush=True)
 
 

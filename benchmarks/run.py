@@ -22,6 +22,10 @@ keys).
   sharded (group)     — the model-parallel (--mesh) serving step over 2
                         host devices: acoustic step + batched serve
                         (skipped rows on a 1-device host)
+  sharded2d (group)   — the 2D ('data','model') mesh serving step over
+                        4 host devices (--mesh 2x2): slot pool sharded
+                        on 'data', weights on 'model' (skipped rows
+                        below 4 devices)
   kernel_<name>       — Pallas kernels, interpret-mode wall time +
                         analytic v5e roofline time (derived column)
   dryrun_summary      — roofline terms per dry-run artifact (if present)
@@ -222,6 +226,67 @@ def sharded_rows():
         f"rtf={dt/audio_s:.3f};{audio_s/dt:.2f}x_realtime;model_parallel=2")
 
 
+def sharded_2d_rows():
+    """2D ('data','model') mesh serving on host devices (--mesh RxC):
+    the slot pool shards over a 2-wide 'data' axis (each shard holds
+    b/2 slots end-to-end) while FC/head weights shard over a 2-wide
+    'model' axis.  Needs >= 4 jax devices — the CI bench-smoke job runs
+    this group in its own process with
+    XLA_FLAGS=--xla_force_host_platform_device_count=4; on a smaller
+    host the rows are emitted as skipped (see sharded_rows).  Same CPU
+    caveat: forced host devices share cores, so these rows pin the 2D
+    path's health/overhead — the throughput-scaling win needs real
+    accelerator devices (ROADMAP item 5)."""
+    if jax.device_count() < 4:
+        print("# sharded2d rows skipped: needs >= 4 devices "
+              "(XLA_FLAGS=--xla_force_host_platform_device_count=4)",
+              flush=True)
+        return
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import compat
+    from repro.data.pipeline import SyntheticASR
+    from repro.launch.serve import asr_demo_engine, serve_mesh
+    from repro.parallel import sharding as shlib
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    params = tds.init_tds(jax.random.PRNGKey(0), TDS_CONFIG)
+    fc = FEATURE_CONFIG
+    nfr = 8
+    need = fc.frame_len + (nfr - 1) * fc.frame_shift
+    pspecs = shlib.tds_param_specs(TDS_CONFIG, mesh)
+    placed = shlib.place_tree(params, pspecs, mesh)
+
+    def body(p, ss, x):
+        feats = features.mfcc(x, fc, use_pallas=True, hot=True)[:, :nfr]
+        return tds.forward_batched(p, TDS_CONFIG, feats, ss, axis="model")
+
+    ss = tds.init_batched_stream_state(TDS_CONFIG, 4)
+    sspecs = shlib.asr_state_specs(ss, mesh)
+    step = jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=(pspecs, sspecs, P("data", None)),
+        out_specs=(P("data", None, None), sspecs), check_vma=False))
+    R = np.random.RandomState(0)
+    ss = shlib.place_tree(ss, sspecs, mesh)
+    x = jax.device_put(R.randn(4, need).astype(np.float32),
+                       NamedSharding(mesh, P("data", None)))
+    us, _ = _timeit(step, placed, ss, x, n=5, warmup=2)
+    row("acoustic_step_2d", us,
+        f"2x2_data_x_model_b4;{us/4:.0f}us_per_slot")
+
+    engine, words = asr_demo_engine(4, mesh=serve_mesh("2x2"))
+    data = SyntheticASR(words)
+    utts = [data.utterance(i)["audio"] for i in range(4)]
+    audio_s = sum(len(a) for a in utts) / 16000
+    engine.serve(utts)        # warmup replays the exact timed schedule
+    engine.reset()
+    t0 = time.perf_counter()
+    engine.serve(utts)
+    dt = time.perf_counter() - t0
+    row("serve_asr_2d_d4", dt * 1e6,
+        f"rtf={dt/audio_s:.3f};{audio_s/dt:.2f}x_realtime;mesh=2x2")
+
+
 def acoustic_steps():
     """The acoustic half of the decoding step — fused-logmel MFCC tail +
     the slot-native TDS forward — jitted, at B=1 and B=4 slots (the
@@ -356,10 +421,12 @@ GROUPS = {
     "decode": (beam_throughput, acoustic_steps, multistream_throughput,
                rtf_measured),
     "sharded": (sharded_rows,),
+    "sharded2d": (sharded_2d_rows,),
     "kernels": (kernel_benches,),
     "dryrun": (dryrun_summary,),
 }
-GROUP_ORDER = ("paper", "decode", "sharded", "kernels", "dryrun")
+GROUP_ORDER = ("paper", "decode", "sharded", "sharded2d", "kernels",
+               "dryrun")
 
 
 def main(argv=None) -> None:

@@ -21,9 +21,11 @@ docs/examples):
   RPL004  thread discipline: `@worker_only` engine methods may not be
           called from asyncio handlers except through an EngineWorker
           submit/call thunk.
-  RPL005  RNG discipline: modules that jit with `out_shardings` and
-          create PRNG keys must call `mesh_invariant_rng()` (the PR 5
-          elastic mesh-dependent-init class).
+  RPL005  RNG discipline: modules that run sharded compute (jit with
+          `out_shardings`, or `shard_map` — including the serving
+          engines' ('data','model') mesh step) and create PRNG keys
+          must call `mesh_invariant_rng()` (the PR 5 elastic
+          mesh-dependent-init class).
 
 Suppress a finding with a trailing or preceding-line comment
 `# repro-lint: disable=RPL001` (comma-separate several codes), or a

@@ -25,8 +25,8 @@ RULE_DOCS = {
     "RPL003": "aliasing: engine slot state escapes without copy_result",
     "RPL004": "thread discipline: @worker_only engine method called "
               "from an asyncio handler outside a worker thunk",
-    "RPL005": "RNG discipline: out_shardings init without "
-              "mesh_invariant_rng()",
+    "RPL005": "RNG discipline: sharded compute (out_shardings jit or "
+              "shard_map) + PRNGKey without mesh_invariant_rng()",
 }
 
 

@@ -421,9 +421,11 @@ def rule_rpl002(ctx: Context) -> List[Finding]:
 # RPL003 — engine-state aliasing
 # ---------------------------------------------------------------------------
 
-# attributes holding (or caching) engine/slot state arrays
+# attributes holding (or caching) engine/slot state arrays —
+# `_prepared` (sharded int8 weight shards) and `_slot_steps` (per-slot
+# step counters) joined with the 2D-mesh sharded engine step
 _STATE_ATTRS = {"result", "_slot_bufs", "_beam", "_stream_state", "_gen",
-                "_tokens", "cache"}
+                "_tokens", "cache", "_prepared", "_slot_steps"}
 # engine receivers state may hang off
 _ENGINE_NAMES = {"self", "eng", "engine", "sess", "session"}
 # engine methods whose return values are materialized views over
@@ -537,11 +539,16 @@ def rule_rpl004(mod: ParsedModule, ctx: Context) -> List[Finding]:
 
 def rule_rpl005(mod: ParsedModule, ctx: Context) -> List[Finding]:
     calls = [n for n in ast.walk(mod.tree) if isinstance(n, ast.Call)]
-    has_out_shardings = any(
-        any(kw.arg in ("out_shardings", "in_shardings")
-            for kw in c.keywords) and _attr_tail(c.func) in _JIT_WRAPPERS
+    # sharded compute in this module: a jit with explicit shardings, or
+    # a shard_map call (the serving engines' 2D ('data','model') step —
+    # mesh-dependent RNG would fork per data shard just like it forked
+    # per topology in the PR 5 elastic-restart bug)
+    has_sharded = any(
+        (any(kw.arg in ("out_shardings", "in_shardings")
+             for kw in c.keywords) and _attr_tail(c.func) in _JIT_WRAPPERS)
+        or _attr_tail(c.func) == "shard_map"
         for c in calls)
-    if not has_out_shardings:
+    if not has_sharded:
         return []
     key_calls = [c for c in calls if _attr_tail(c.func) == "PRNGKey"]
     if not key_calls:
@@ -550,10 +557,12 @@ def rule_rpl005(mod: ParsedModule, ctx: Context) -> List[Finding]:
         return []
     return [Finding(
         mod.rel, c.lineno, c.col_offset, "RPL005",
-        "PRNGKey in a module that jits with out_shardings but never "
-        "calls mesh_invariant_rng(): legacy threefry makes the generated "
-        "values depend on the mesh, so elastic restarts on a different "
-        "topology silently fork the trajectory (PR 5 bug)")
+        "PRNGKey in a module that runs sharded compute (jit with "
+        "out_shardings, or shard_map) but never calls "
+        "mesh_invariant_rng(): legacy threefry makes the generated "
+        "values depend on the mesh — elastic restarts on a different "
+        "topology silently fork the trajectory (PR 5 bug), and a "
+        "('data','model') serving mesh would fork it per data shard")
         for c in key_calls]
 
 

@@ -58,6 +58,41 @@ def shard_local_cols(x, kloc, axis):
     return jax.lax.dynamic_slice_in_dim(x, i * kloc, kloc, axis=1)
 
 
+def overlap_splits(n: int, n_chunks: int = 2):
+    """Static [lo, hi) output-column chunk boundaries for the
+    latency-hiding psum split (`psum_overlap_matmul`).  Python ints so
+    every slice is static under jit; degenerates to one full-width
+    chunk when n < n_chunks."""
+    n_chunks = max(1, min(int(n_chunks), int(n)))
+    return [(i * n // n_chunks, (i + 1) * n // n_chunks)
+            for i in range(n_chunks)]
+
+
+def psum_overlap_matmul(xloc, wm, axis, n_chunks: int = 2):
+    """Latency-hiding model-parallel contraction: xloc (M, K/n) local
+    activation columns, wm (K/n, N) this device's feature-axis weight
+    shard -> the full (M, N) all-reduced product.
+
+    The output columns are split into static chunks and emitted as
+    matmul(c0), psum(c0), matmul(c1), psum(c1), ...: chunk c+1's local
+    matmul has no data dependence on chunk c's all-reduce, so a backend
+    with async collectives starts c's psum and computes c+1's partial
+    products under it (the coprocessor-scaling overlap trick; see
+    ROADMAP item 4).  Each output element is still ONE local dot +
+    ONE psum — the reduction structure per element is identical to the
+    synchronous `psum(xloc @ wm, axis)` — but XLA may tile the narrower
+    per-chunk matmuls differently, so parity with the synchronous path
+    is numerical (~1e-6), not bitwise; the sync path stays the parity
+    reference and this variant sits behind `EngineConfig.overlap_psum`.
+    On CPU host devices there is no async-collective win: correctness
+    coverage only."""
+    parts = []
+    for lo, hi in overlap_splits(wm.shape[1], n_chunks):
+        wc = jax.lax.slice_in_dim(wm, lo, hi, axis=1)
+        parts.append(jax.lax.psum(xloc @ wc, axis))
+    return jnp.concatenate(parts, axis=1)
+
+
 def prepare_int8_weights(w):
     """Quantize a static weight matrix ONCE: w (K, N) float ->
     (wq (K, N) i8, ws (N,) f32 per-output-channel scales).
@@ -70,7 +105,7 @@ def prepare_int8_weights(w):
 
 
 def int8_matmul_prepared(x, wq, ws, *, bm=128, bn=128, bk=128, policy=None,
-                         hot=False, axis=None):
+                         hot=False, axis=None, overlap=False):
     """x: (M, K) float; wq/ws from `prepare_int8_weights` -> (M, N) f32.
 
     The hot-path half of the int8 pipeline: per-row activation
@@ -83,11 +118,21 @@ def int8_matmul_prepared(x, wq, ws, *, bm=128, bn=128, bk=128, policy=None,
     activations are quantized on their FULL rows first (so the per-row
     scales match the unsharded path exactly), the matching xq columns
     are sliced locally, and the rescaled partial products are psummed
-    over `axis`."""
+    over `axis`.  `overlap` applies the `psum_overlap_matmul`
+    output-column split to the sharded path (per-chunk dispatch + psum
+    so the all-reduces hide under the next chunk's matmul); the per-row
+    activation scales are computed once on the full rows either way."""
     mode = resolve(policy, hot=hot)
     xq, xs = quantize_rows(x)
     if axis is not None and wq.shape[0] != xq.shape[1]:
         xloc = shard_local_cols(xq, wq.shape[0], axis)
+        if overlap:
+            parts = []
+            for lo, hi in overlap_splits(wq.shape[1]):
+                parts.append(jax.lax.psum(
+                    _int8_dispatch(xloc, wq[:, lo:hi], xs, ws[lo:hi],
+                                   mode, bm=bm, bn=bn, bk=bk), axis))
+            return jnp.concatenate(parts, axis=1)
         return jax.lax.psum(
             _int8_dispatch(xloc, wq, xs, ws, mode, bm=bm, bn=bn, bk=bk),
             axis)

@@ -21,13 +21,22 @@ Two modes, one shape (repro.serving): a fixed slot pool owned by an
       --requests 8 --max-new 32
   XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \
       python -m repro.launch.serve --mode asr --streams 4 --mesh 2
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+      python -m repro.launch.serve --mode asr --streams 4 --mesh 2x2
 
 `--mesh N` runs the ASR fused step model-parallel: every TDS FC/head
 weight is sharded over N devices on its feature axis and the step runs
 under shard_map (partial-sum + all-reduce per matmul) — each device
 reads 1/N of the FC weight bytes per window, the lever the flat B=1
-`rtf_measured_step` is bound by (see ROADMAP).  Transcripts are
-parity-tested against the unsharded engine (tests/test_sharded_serving).
+`rtf_measured_step` is bound by (see ROADMAP).  `--mesh RxC` makes the
+mesh 2D ('data', 'model'): the slot pool shards over the R-way 'data'
+axis (each data shard decodes n_slots/R slots end-to-end — beam
+expansion is slot-parallel, so no 'data' collectives) while weights
+shard over the C-way 'model' axis, the layout that scales serve
+throughput with device count.  `--overlap-psum` chunks the model-axis
+all-reduces so they hide under the next chunk's matmul.  Transcripts
+are parity-tested against the unsharded engine
+(tests/test_sharded_serving).
 """
 from __future__ import annotations
 
@@ -48,19 +57,42 @@ def _policy(args) -> KernelPolicy:
     return KernelPolicy(args.kernels)
 
 
-def serve_mesh(n_model: int):
-    """`--mesh N` -> a 1-axis ('model',) Mesh over N devices, or None
-    for N <= 1 (the exact unsharded single-device step).  On a CPU host
-    the devices come from XLA_FLAGS=--xla_force_host_platform_device_count
-    (set it BEFORE the process starts; jax locks the device count at
-    first use)."""
+def serve_mesh(spec):
+    """`--mesh` spec -> a serving Mesh, or None for the exact unsharded
+    single-device step.
+
+      * N (int or "N")  : 1-axis ('model',) mesh over N devices — PR 5's
+                          feature-axis weight sharding; N <= 1 -> None.
+      * "RxC"           : 2-axis ('data', 'model') mesh over R*C devices
+                          — the slot pool shards over the R-way 'data'
+                          axis, FC/head weights over the C-way 'model'
+                          axis.  "1x1" -> a real 1x1 mesh (exercises the
+                          2D step path on one device).
+
+    On a CPU host the devices come from
+    XLA_FLAGS=--xla_force_host_platform_device_count (set it BEFORE the
+    process starts; jax locks the device count at first use)."""
+    def _need(n, what):
+        if jax.device_count() < n:
+            raise SystemExit(
+                f"--mesh {what} needs {n} devices but jax sees "
+                f"{jax.device_count()}; on a CPU host prefix the command "
+                f"with XLA_FLAGS=--xla_force_host_platform_device_count"
+                f"={n}")
+
+    if isinstance(spec, str) and "x" in spec:
+        try:
+            r, c = (int(v) for v in spec.split("x"))
+        except ValueError:
+            raise SystemExit(f"--mesh {spec!r}: expected N or RxC")
+        if r < 1 or c < 1:
+            raise SystemExit(f"--mesh {spec!r}: axes must be >= 1")
+        _need(r * c, spec)
+        return jax.make_mesh((r, c), ("data", "model"))
+    n_model = int(spec)
     if n_model <= 1:
         return None
-    if jax.device_count() < n_model:
-        raise SystemExit(
-            f"--mesh {n_model} needs {n_model} devices but jax sees "
-            f"{jax.device_count()}; on a CPU host prefix the command with "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_model}")
+    _need(n_model, n_model)
     return jax.make_mesh((n_model,), ("model",))
 
 
@@ -112,17 +144,21 @@ def asr_demo_system():
 
 
 def asr_demo_engine(n_slots: int, kernels: KernelPolicy = None,
-                    mesh=None, max_queue=None) -> tuple:
+                    mesh=None, max_queue=None,
+                    overlap_psum: bool = False) -> tuple:
     """(engine, words): an AsrEngine over the demo system's program.
     `mesh` (see `serve_mesh`) shards the TDS FC/head weights over its
-    'model' axis and runs the fused step under shard_map; `max_queue`
+    'model' axis — and, with a 'data' axis, the slot pool — running the
+    fused step under shard_map; `overlap_psum` enables the
+    latency-hiding psum split on the sharded contractions; `max_queue`
     is the admission backpressure bound (`EngineConfig.max_queue`)."""
     tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
     program = AsrProgram(tds_cfg, lex, lm, dec_cfg=dec_cfg,
                         ).with_beam_width(25.0)
     engine = AsrEngine(EngineConfig(program, n_slots=n_slots,
                                     kernels=kernels or KernelPolicy(),
-                                    mesh=mesh, max_queue=max_queue),
+                                    mesh=mesh, max_queue=max_queue,
+                                    overlap_psum=overlap_psum),
                        params)
     return engine, words
 
@@ -132,7 +168,8 @@ def serve_asr(args):
     80 ms chunks; poll() tracks the live best hypothesis."""
     from repro.data.pipeline import SyntheticASR
 
-    engine, words = asr_demo_engine(1, _policy(args), serve_mesh(args.mesh))
+    engine, words = asr_demo_engine(1, _policy(args), serve_mesh(args.mesh),
+                                    overlap_psum=args.overlap_psum)
     data = SyntheticASR(words)
     spp = engine.plan.samples_per_step
     n_utts = 2 if args.utterances is None else args.utterances
@@ -161,7 +198,8 @@ def serve_asr_multistream(args):
     from repro.data.pipeline import SyntheticASR
 
     engine, words = asr_demo_engine(args.streams, _policy(args),
-                                    serve_mesh(args.mesh))
+                                    serve_mesh(args.mesh),
+                                    overlap_psum=args.overlap_psum)
     data = SyntheticASR(words)
     # default: one utterance per slot; an explicit --utterances wins
     # (fewer than --streams just leaves the extra slots masked idle)
@@ -195,7 +233,8 @@ def serve_network(args):
 
     asr_engine, _ = asr_demo_engine(args.streams, _policy(args),
                                     serve_mesh(args.mesh),
-                                    max_queue=args.max_queue)
+                                    max_queue=args.max_queue,
+                                    overlap_psum=args.overlap_psum)
     lm_cfg = get_config(args.arch).tiny()
     lm = build_lm(lm_cfg, None)
     lm_program = LmProgram(lm_cfg, cache_len=args.prompt_len + args.max_new,
@@ -243,13 +282,23 @@ def main(argv=None):
                     help="KernelPolicy mode for Pallas-backed decode ops "
                          "(auto: Mosaic on TPU, ref for the hot path on "
                          "CPU)")
-    ap.add_argument("--mesh", type=int, default=1, metavar="N",
-                    help="ASR model-parallel width: shard every TDS "
-                         "FC/head weight over N devices ('model' mesh "
-                         "axis) and run the fused step under shard_map; "
-                         "1 = the unsharded single-device step (on CPU "
-                         "hosts set XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=N first)")
+    ap.add_argument("--mesh", type=str, default="1", metavar="N|RxC",
+                    help="ASR parallel spec: N shards every TDS FC/head "
+                         "weight over N devices ('model' mesh axis) and "
+                         "runs the fused step under shard_map; RxC "
+                         "additionally shards the slot pool over an "
+                         "R-way 'data' axis (C-way 'model'), so "
+                         "throughput scales with R; 1 = the unsharded "
+                         "single-device step (on CPU hosts set "
+                         "XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=R*C "
+                         "first)")
+    ap.add_argument("--overlap-psum", action="store_true",
+                    help="sharded ASR step: chunk each model-axis "
+                         "all-reduce so it overlaps the next chunk's "
+                         "local matmul (async-collective backends; "
+                         "numerical ~1e-6 parity with the default "
+                         "synchronous psum)")
     ap.add_argument("--serve", action="store_true",
                     help="run the asyncio network front-end (HTTP "
                          "chunked streaming over the demo ASR + LM "
@@ -265,7 +314,7 @@ def main(argv=None):
     if args.serve:
         return serve_network(args)
     if args.mode == "lm":
-        if args.mesh > 1:
+        if args.mesh not in ("1", "0"):
             ap.error("--mesh is ASR-only (LmEngine rejects a mesh; "
                      "sharded LM serving goes through launch/steps.py "
                      "build_cell)")

@@ -175,7 +175,8 @@ def quantize_params(params, cfg: TDSConfig) -> dict:
 def forward_batched(params, cfg: TDSConfig, feats: jax.Array, state: dict,
                     use_int8: bool = False, kernels=None,
                     prepared: Optional[dict] = None,
-                    axis: Optional[str] = None):
+                    axis: Optional[str] = None,
+                    overlap: bool = False):
     """Slot-native TDS forward.  feats: (B, T, n_mfcc); state: the
     batched stream state ((B, k-1, w, c_in) per conv).  Returns
     (log_probs (B, T', V), new_state).
@@ -199,6 +200,12 @@ def forward_batched(params, cfg: TDSConfig, feats: jax.Array, state: dict,
     Activations stay replicated, so only the weight reads are split.
     Weights left whole (non-divisible feature dim) are detected by
     shape and contract locally, bit-identical to axis=None.
+
+    `overlap` (sharded path only) routes each contraction through
+    `ops.psum_overlap_matmul`'s output-column split so layer l's
+    all-reduce chunks hide under the matmuls still being issued —
+    numerically ~1e-6-equal to the synchronous reference, which stays
+    the parity path (see `psum_overlap_matmul`).
     """
     from repro.kernels import ops
 
@@ -214,7 +221,8 @@ def forward_batched(params, cfg: TDSConfig, feats: jax.Array, state: dict,
                 pq = prepared[name]
                 return ops.int8_matmul_prepared(xm, pq["wq"], pq["ws"],
                                                 policy=kernels, hot=True,
-                                                axis=axis) + p["b"]
+                                                axis=axis,
+                                                overlap=overlap) + p["b"]
             return ops.int8_matmul(xm, p["w"], policy=kernels,
                                    hot=True) + p["b"]
         wm = p["w"]
@@ -223,6 +231,8 @@ def forward_batched(params, cfg: TDSConfig, feats: jax.Array, state: dict,
             # matching this device's weight shard, contract locally,
             # all-reduce the partial sums; bias added post-reduction
             xloc = ops.shard_local_cols(xm, wm.shape[0], axis)
+            if overlap:
+                return ops.psum_overlap_matmul(xloc, wm, axis) + p["b"]
             return jax.lax.psum(xloc @ wm, axis) + p["b"]
         return xm @ wm + p["b"]
 

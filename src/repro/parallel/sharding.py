@@ -307,6 +307,33 @@ def tds_prepared_specs(tds_cfg, mesh: Mesh) -> dict:
             if s.kind in ("fc", "head")}
 
 
+def asr_state_specs(tree, mesh: Mesh):
+    """PartitionSpec tree sharding the leading SLOT axis of an ASR
+    serving state pytree over the 'data' mesh axis (ASRPU's pool of
+    parallel decode workers, one sub-pool per data shard).
+
+    Applies uniformly to every per-slot buffer the fused step carries:
+    the TDS left-context `StreamState` ((B, k-1, w, c) per conv), the
+    `BeamState` leaves ((B, K, ...)), and the gathered step inputs (the
+    (b, w, spp) sample batch and the (b,) slot-index vector).  Trailing
+    axes stay unsharded — beam expansion is embarrassingly parallel
+    across slots, so a data shard holds its slots end-to-end and the
+    step needs no cross-shard collectives outside the 'model'-axis
+    psums of `tds_param_specs`-sharded matmuls (composes with those by
+    construction: state never touches the 'model' axis).  Leaves whose
+    leading dim does not divide the axis fall back to replicated (the
+    engine enforces divisibility for the pool; this is the same safety
+    net as `_param_rule`)."""
+    nd = mesh.shape["data"]
+
+    def f(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % nd == 0:
+            return P("data", *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(f, tree)
+
+
 def place_tree(tree, spec_tree, mesh: Mesh):
     """device_put every leaf with its NamedSharding(mesh, spec)."""
     return jax.tree.map(

@@ -50,6 +50,19 @@ its shard and psums partial products (`tds.forward_batched(axis=)`),
 and everything else — convs, LayerNorms, MFCC, hypothesis expansion —
 stays replicated.  mesh=None is the exact single-device path.
 
+A 2D ('data', 'model') mesh additionally shards the SLOT POOL: each
+data shard owns n_slots/n_data contiguous slots — their TDS
+left-context state, beam, and gathered sub-batch rows
+(`parallel.sharding.asr_state_specs`) — and steps them end-to-end
+without any 'data'-axis collective (beam expansion is embarrassingly
+parallel across slots; only the 'model'-axis matmul psums remain).
+The scheduler keeps the gather/scatter shard-aligned: eligible slots
+group by home shard, every shard runs the same per-shard pow-2 bucket,
+and pad rows carry index -1 so their garbage update is dropped on
+scatter-back.  Per-slot trajectories stay bit-identical to mesh=None.
+`EngineConfig.overlap_psum` swaps the model-axis psums for the
+latency-hiding output-column split (`ops.psum_overlap_matmul`).
+
 Two API layers:
   * slot level — `feed_slot` / `pump` / `slot_best` / `reset_slot`:
     direct slot addressing for the deprecated ASRPU command shims
@@ -100,6 +113,17 @@ class AsrEngine(Engine):
         assert self._spp == self.plan.samples_per_step, \
             (self._spp, self.plan.samples_per_step)
         assert features.frames_producible(self._need, fc) == nfr
+        mesh = config.mesh
+        # 2D ('data','model') mesh: the slot pool itself is sharded —
+        # each data shard owns n_slots/n_data contiguous pool slots
+        # (slot s lives on shard s // slots_per_shard) and carries them
+        # end-to-end through the fused step; 'model' keeps PR 5's
+        # feature-axis weight shards.  mesh=None / 1D stay the exact
+        # replicated-pool paths.
+        self._data_axis = ("data" if mesh is not None
+                           and "data" in mesh.axis_names else None)
+        self._n_data = mesh.shape["data"] if self._data_axis else 1
+        self._slots_per_shard = self.n_slots // self._n_data
         self._buckets = self.program.step_buckets()
         self._slot_buckets = self._make_slot_buckets()
         # int8 weights are quantized exactly ONCE, here — the decoding
@@ -115,14 +139,20 @@ class AsrEngine(Engine):
 
     # ---- the fused decoding-step program -----------------------------
     def _make_slot_buckets(self):
-        """Ascending sub-batch sizes a gathered step may run at (powers
-        of two, topped by n_slots) — one jit entry per (b, w) pair,
-        traced lazily, mirroring `AsrProgram.step_buckets`."""
+        """Ascending PER-SHARD sub-batch sizes a gathered step may run
+        at (powers of two, topped by slots_per_shard) — one jit entry
+        per (b, w) pair, traced lazily, mirroring
+        `AsrProgram.step_buckets`.  Without a 'data' mesh axis,
+        slots_per_shard == n_slots and these are the total sub-batch
+        sizes as before; with one, the dispatched batch is
+        bucket * n_data rows (every shard steps the same local bucket,
+        so the gather/scatter stays shard-aligned — a multiple of
+        n_data by construction)."""
         out, b = [], 1
-        while b < self.n_slots:
+        while b < self._slots_per_shard:
             out.append(b)
             b *= 2
-        out.append(self.n_slots)
+        out.append(self._slots_per_shard)
         return tuple(sorted(set(out)))
 
     def _step_fn(self):
@@ -139,6 +169,9 @@ class AsrEngine(Engine):
         nfr = self.plan.feat_frames_per_step
         kernels = self.config.kernels
         axis = "model" if self.config.mesh is not None else None
+        data_axis = self._data_axis
+        spshard = self._slots_per_shard
+        overlap = self.config.overlap_psum
 
         def step(params, prepared, stream_state, beam_state, samples,
                  slots):
@@ -149,24 +182,48 @@ class AsrEngine(Engine):
             # one at a time).  slots: (b,) int32 pool indices; bucket
             # padding repeats a real slot, whose duplicate rows compute
             # an identical update, so the scatter-back stays exact.
+            #
+            # With a 'data' mesh axis, this body sees one data shard's
+            # view: stream_state/beam_state are its slots_per_shard
+            # local pool rows, samples/slots its rows of the gathered
+            # sub-batch.  slots stay GLOBAL pool indices (shard d owns
+            # [d*spshard, (d+1)*spshard)); bucket padding is -1 — pad
+            # rows gather local row 0, compute a garbage update, and
+            # are dropped by the out-of-range scatter, so every real
+            # slot's trajectory is bit-identical to the unsharded step.
             b, w, _ = samples.shape
-            ss = jax.tree.map(lambda a: a[slots], stream_state)
-            bs = jax.tree.map(lambda a: a[slots], beam_state)
+            if data_axis is not None:
+                d = jax.lax.axis_index(data_axis)
+                loc = slots - d * spshard
+                valid = slots >= 0
+                gidx = jnp.where(valid, loc, 0)
+            else:
+                gidx = slots
+            ss = jax.tree.map(lambda a: a[gidx], stream_state)
+            bs = jax.tree.map(lambda a: a[gidx], beam_state)
             feats = features.mfcc(samples, prog.feat_cfg, use_pallas=True,
                                   kernels=kernels, hot=True)[:, :, :nfr]
             feats = feats.reshape(b, w * nfr, -1)
             logp, new_ss = tds.forward_batched(
                 params, prog.tds_cfg, feats, ss,
                 use_int8=prog.use_int8, kernels=kernels, prepared=prepared,
-                axis=axis)
+                axis=axis, overlap=overlap)
 
             def expand(bst, lp):           # lp: (b, V) — one frame, all slots
                 return dec.expand_step_batched(bst, lp, prog.lex, prog.lm,
                                                prog.dec_cfg, kernels), None
             new_bs, _ = jax.lax.scan(expand, bs, jnp.swapaxes(logp, 0, 1))
 
-            def put(full, new):
-                return full.at[slots].set(new)
+            if data_axis is not None:
+                # out-of-range rows (pad, or another shard's slot — the
+                # scheduler never builds those) drop instead of writing
+                widx = jnp.where(valid, loc, spshard)
+
+                def put(full, new):
+                    return full.at[widx].set(new, mode="drop")
+            else:
+                def put(full, new):
+                    return full.at[slots].set(new)
             return (jax.tree.map(put, stream_state, new_ss),
                     jax.tree.map(put, beam_state, new_bs))
 
@@ -175,8 +232,13 @@ class AsrEngine(Engine):
     def _build_step(self):
         """jit the fused step; with a mesh, wrap it in `shard_map` so
         each device reads only its FC/head weight shard (psum-reduced
-        contractions inside `tds.forward_batched`) while slot state,
-        samples, and the expansion stay replicated."""
+        contractions inside `tds.forward_batched`).  On a 1D ('model',)
+        mesh, slot state, samples, and the expansion stay replicated
+        (PR 5's layout, bitwise-preserved); on a 2D ('data','model')
+        mesh, the pool state and the gathered sub-batch are sharded on
+        their slot axis over 'data' (`asr_state_specs`) and come back
+        out still sharded — expansion is slot-parallel, so the step has
+        no 'data'-axis collectives at all."""
         step = self._step_fn()
         mesh = self.config.mesh
         if mesh is None:
@@ -188,6 +250,20 @@ class AsrEngine(Engine):
         pspecs = shlib.tds_param_specs(self.program.tds_cfg, mesh)
         qspecs = (shlib.tds_prepared_specs(self.program.tds_cfg, mesh)
                   if self._prepared is not None else P())
+        if self._data_axis is not None:
+            ss_t, bs_t = jax.eval_shape(
+                lambda: (tds.init_batched_stream_state(
+                            self.program.tds_cfg, self.n_slots),
+                         dec.init_batched_state(
+                            self.n_slots, self.program.dec_cfg.beam_size,
+                            self.program.lm)))
+            sspecs = shlib.asr_state_specs(ss_t, mesh)
+            bspecs = shlib.asr_state_specs(bs_t, mesh)
+            return jax.jit(compat.shard_map(
+                step, mesh=mesh,
+                in_specs=(pspecs, qspecs, sspecs, bspecs,
+                          P("data", None, None), P("data")),
+                out_specs=(sspecs, bspecs), check_vma=False))
         rep = P()
         return jax.jit(compat.shard_map(
             step, mesh=mesh,
@@ -240,6 +316,19 @@ class AsrEngine(Engine):
             self._beam = dec.init_batched_state(
                 self.n_slots, self.program.dec_cfg.beam_size,
                 self.program.lm)
+            if self._data_axis is not None:
+                # place the pool slot-axis-sharded from the start so the
+                # sharded step never reshards it (outputs keep the
+                # sharding via out_specs; resets/readouts go through
+                # plain jit, which GSPMD handles on sharded inputs)
+                from repro.parallel import sharding as shlib
+                mesh = self.config.mesh
+                self._stream_state = shlib.place_tree(
+                    self._stream_state,
+                    shlib.asr_state_specs(self._stream_state, mesh), mesh)
+                self._beam = shlib.place_tree(
+                    self._beam,
+                    shlib.asr_state_specs(self._beam, mesh), mesh)
 
     def adopt_state(self, old: "AsrEngine") -> None:
         """Take over another engine's in-flight slot-pool state (sample
@@ -303,15 +392,8 @@ class AsrEngine(Engine):
                 key=lambda b: (b * int((avail >= b).sum()), b))
         slots = [s for s in range(self.n_slots) if avail[s] >= w]
         self._ensure_state()
-        b = next(x for x in self._slot_buckets if x >= len(slots))
-        batch = np.zeros((b, w, self._need), np.float32)
-        for j, s in enumerate(slots):
-            for i in range(w):
-                off = i * self._spp
-                batch[j, i] = self._slot_bufs[s][off:off + self._need]
-            self._slot_bufs[s] = self._slot_bufs[s][w * self._spp:]
-        batch[len(slots):] = batch[0]      # bucket padding: duplicate rows
-        idx = np.array(slots + slots[:1] * (b - len(slots)), np.int32)
+        batch, idx = self._assemble_batch(slots, w)
+        b = idx.shape[0]
         # transfer-guarded: the batch/idx uploads are the ONLY intended
         # host->device traffic per step; anything implicit (a stray
         # numpy weight, a scalar readback inside dispatch) is a bug
@@ -327,6 +409,53 @@ class AsrEngine(Engine):
             if self._owner[s] is not None:      # slot-level API has no owner
                 self.metrics.on_first_result(self._owner[s])
         return True
+
+    def _assemble_batch(self, slots, w):
+        """Gather each eligible slot's next `w` buffered windows into a
+        bucket-padded (b, w, samples_per_window) batch plus its (b,)
+        slot-index vector, retiring the consumed samples.
+
+        Unsharded / 1D mesh: b is the smallest pow-2 slot bucket
+        covering len(slots); padding duplicates row 0 (its repeated
+        slot index recomputes an identical update, so the scatter-back
+        stays exact).  With a 'data' mesh axis the batch is
+        SHARD-ALIGNED: slots group by home shard (slot s lives on shard
+        s // slots_per_shard), every shard gets the same local bucket
+        `bloc` (smallest covering the largest group) so b = bloc*n_data
+        is a multiple of n_data and rows [d*bloc, (d+1)*bloc) land on
+        shard d under the step's P('data') in_specs; pad rows are
+        zeros with index -1, which the sharded step drops on
+        scatter-back (duplicate-padding would be wrong here — a shard
+        with no eligible slots has no real row to duplicate)."""
+        if self._data_axis is None:
+            b = next(x for x in self._slot_buckets if x >= len(slots))
+            batch = np.zeros((b, w, self._need), np.float32)
+            for j, s in enumerate(slots):
+                self._fill_row(batch, j, s, w)
+            batch[len(slots):] = batch[0]  # bucket padding: duplicate rows
+            idx = np.array(slots + slots[:1] * (b - len(slots)), np.int32)
+            return batch, idx
+        spshard = self._slots_per_shard
+        groups = [[s for s in slots if s // spshard == d]
+                  for d in range(self._n_data)]
+        bloc = next(x for x in self._slot_buckets
+                    if x >= max(len(g) for g in groups))
+        batch = np.zeros((bloc * self._n_data, w, self._need), np.float32)
+        idx = np.full((bloc * self._n_data,), -1, np.int32)
+        for d, group in enumerate(groups):
+            for j, s in enumerate(group):
+                self._fill_row(batch, d * bloc + j, s, w)
+                idx[d * bloc + j] = s
+        return batch, idx
+
+    def _fill_row(self, batch, row, slot, w):
+        """Extract slot's next w windows into one batch row (window by
+        window, exactly as w=1 steps would see them) and retire the
+        consumed samples, keeping the MFCC framing overlap buffered."""
+        for i in range(w):
+            off = i * self._spp
+            batch[row, i] = self._slot_bufs[slot][off:off + self._need]
+        self._slot_bufs[slot] = self._slot_bufs[slot][w * self._spp:]
 
     def _flush_finished_tails(self) -> None:
         """Zero-pad the trailing partial window of finished slots so the

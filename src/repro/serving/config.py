@@ -168,13 +168,29 @@ class EngineConfig:
     the old per-call `use_pallas_prune` bool threaded through the
     decoder; see repro.kernels.policy.KernelPolicy.
 
-    `mesh` is the model-parallel spec: a `jax.sharding.Mesh` with a
-    'model' axis.  The ASR engine then places FC/head weights as
-    feature-axis shards and runs its fused step under `shard_map`, so
-    each device reads only its weight shard (the B=1 fp32 step is bound
-    by the per-window FC weight traffic; see ROADMAP).  None (the
-    default) keeps the exact single-device step — not a 1-device mesh,
-    the same unsharded jit as before.
+    `mesh` is the parallel spec: a `jax.sharding.Mesh` with a 'model'
+    axis, and optionally a 'data' axis.  The ASR engine then places
+    FC/head weights as feature-axis shards over 'model' and runs its
+    fused step under `shard_map`, so each device reads only its weight
+    shard (the B=1 fp32 step is bound by the per-window FC weight
+    traffic; see ROADMAP).  With a 'data' axis the SLOT POOL is sharded
+    too: each data shard holds `n_slots / n_data` slots' stream state,
+    beam, and gathered sub-batch rows end-to-end (beam expansion is
+    embarrassingly parallel across slots, so the only collectives stay
+    the 'model'-axis psums), which is what scales serve throughput with
+    device count instead of just splitting weight reads.  `n_slots`
+    must divide evenly over the 'data' axis.  None (the default) keeps
+    the exact single-device step — not a 1-device mesh, the same
+    unsharded jit as before — and 1D ('model',) meshes keep PR 5's
+    replicated-pool step bitwise.
+
+    `overlap_psum` switches the sharded step's model-parallel
+    contractions to the latency-hiding output-column split
+    (`ops.psum_overlap_matmul`): each layer's all-reduce is chunked so
+    it can complete under the next chunk's local matmul on backends
+    with async collectives.  Numerically ~1e-6-equal to the default
+    synchronous psum, which stays the parity reference.  A no-op
+    without a mesh (there is nothing to overlap).
 
     `max_queue` is the admission backpressure bound: with every slot
     busy and this many sessions already queued, `Engine.open()` raises
@@ -187,6 +203,7 @@ class EngineConfig:
     kernels: KernelPolicy = field(default_factory=KernelPolicy)
     mesh: Optional[Mesh] = None
     max_queue: Optional[int] = None
+    overlap_psum: bool = False
 
     def __post_init__(self):
         if self.n_slots < 1:
@@ -194,9 +211,23 @@ class EngineConfig:
         if self.max_queue is not None and self.max_queue < 0:
             raise ValueError(
                 f"max_queue must be None or >= 0, got {self.max_queue}")
-        if self.mesh is not None and "model" not in self.mesh.axis_names:
-            raise ValueError(
-                f"serving mesh needs a 'model' axis, got {self.mesh}")
+        if self.mesh is not None:
+            if "model" not in self.mesh.axis_names:
+                raise ValueError(
+                    f"serving mesh needs a 'model' axis, got {self.mesh}")
+            extra = [a for a in self.mesh.axis_names
+                     if a not in ("data", "model")]
+            if extra:
+                raise ValueError(
+                    f"serving mesh axes must be ('data', 'model') or "
+                    f"('model',), got extra axes {extra} in {self.mesh}")
+            if "data" in self.mesh.axis_names:
+                nd = self.mesh.shape["data"]
+                if self.n_slots % nd != 0:
+                    raise ValueError(
+                        f"n_slots={self.n_slots} must divide evenly over "
+                        f"the 'data' mesh axis (size {nd}): each data "
+                        f"shard owns n_slots/n_data pool slots")
 
 
 def make_engine(config: EngineConfig, params):

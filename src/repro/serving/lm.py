@@ -6,10 +6,13 @@ covering length bucket (`LmProgram.buckets()`) and run through ONE
 masked multi-row prefill per bucket — the model reads each row's logits
 at its true last token, stops recurrent state before the padding, and
 returns per-row cache metadata (see `LM.prefill(lengths=...)`).  The
-prefill batch is always padded to `n_slots` rows, so staggered
-admissions with arbitrary prompt lengths compile at most one jit entry
-per bucket (the old path compiled one entry per distinct prompt length
-and prefilled one request at a time).  Every engine step is one fused
+prefill batch is padded to the smallest covering pow-2 BATCH sub-bucket
+(like the ASR step's slot buckets) instead of always `n_slots`, so
+admitting one request pays a 1-row prefill, not an n_slots-row one,
+while staggered admissions with arbitrary prompt lengths still compile
+at most one jit entry per (length bucket, batch bucket) pair — asserted
+at runtime after every prefill (the old path compiled one entry per
+distinct prompt length and prefilled one request at a time).  Every engine step is one fused
 `decode_step` over all slots (idle slots decode garbage that is simply
 never read).  Cache position metadata is PER SLOT — `kpos` is (B, Sc)
 and `offset` is (B,) — so staggered admissions with unequal prompt
@@ -52,6 +55,7 @@ class LmEngine(Engine):
         self.lm = LM(self.program.model_cfg)
         self.params = params
         self._buckets = self.program.buckets()
+        self._batch_buckets = self._make_batch_buckets()
         # sliding-window archs clamp the allocated ring to attn_window;
         # all admission-time position metadata must use the real width
         ring = self.lm.cache_len(self.program.cache_len)
@@ -61,6 +65,19 @@ class LmEngine(Engine):
                 p, {"tokens": tokens}, lengths=lengths, cache_len=ring))
         self._reset_pool()
         assert self._ring == ring, (self._ring, ring)
+
+    def _make_batch_buckets(self):
+        """Ascending prefill batch sizes (powers of two, topped by
+        n_slots) — an admission group is padded to the smallest
+        covering one, so a lone admit prefills 1 row instead of
+        n_slots.  Mirrors `AsrEngine._make_slot_buckets`; the jit cache
+        is bounded by len(buckets) * len(batch_buckets) entries."""
+        out, b = [], 1
+        while b < self.n_slots:
+            out.append(b)
+            b *= 2
+        out.append(self.n_slots)
+        return tuple(sorted(set(out)))
 
     def prefill_cache_entries(self) -> Optional[int]:
         """Number of compiled prefill variants (None if the jit cache
@@ -142,7 +159,10 @@ class LmEngine(Engine):
                             [(session, slot)])
 
     def _prefill_group(self, bucket: int, group) -> None:
-        B = self.n_slots           # pad the batch: jit entries ∝ buckets only
+        # pad to the smallest covering batch sub-bucket: jit entries ∝
+        # (length buckets) x (batch buckets), and a 1-request admission
+        # runs a 1-row prefill instead of n_slots rows
+        B = next(b for b in self._batch_buckets if b >= len(group))
         toks = np.zeros((B, bucket), np.int32)
         lens = np.ones((B,), np.int32)
         for i, (sess, _) in enumerate(group):
@@ -176,8 +196,14 @@ class LmEngine(Engine):
             self._gen[slot] = [int(firsts[i])]
             self._rem[slot] = self.program.max_new - 1
             self.metrics.on_first_result(sess)
-        # the padded prefill batch is one dispatch of n_slots rows
-        self.metrics.on_step(len(group), self.n_slots)
+        # the padded prefill batch is one dispatch of B bucket rows
+        self.metrics.on_step(len(group), B)
+        entries = self.prefill_cache_entries()
+        bound = len(self._buckets) * len(self._batch_buckets)
+        assert entries is None or entries <= bound, (
+            f"prefill jit entries {entries} exceed the "
+            f"(length x batch)-bucket bound {bound}: a prefill input "
+            "shape is varying outside the buckets")
 
     @worker_only
     def _step(self) -> bool:

@@ -333,6 +333,43 @@ def test_rpl005_clean_without_sharded_jit(tmp_path):
     assert findings == []
 
 
+def test_rpl005_fires_on_shard_map_module(tmp_path):
+    # the 2D ('data','model') serving-mesh class: shard_map compute
+    # plus PRNGKey init — mesh-dependent RNG would fork per data shard
+    findings, _ = lint_snippet(tmp_path, """
+        import jax
+        from repro import compat
+        from jax.sharding import PartitionSpec as P
+
+        def build(mesh):
+            key = jax.random.PRNGKey(0)
+            w = jax.random.normal(key, (8, 8))
+            step = compat.shard_map(lambda x: x, mesh=mesh,
+                                    in_specs=(P(),), out_specs=P())
+            return step(w)
+    """)
+    assert codes(findings) == ["RPL005"]
+    assert "shard_map" in findings[0].message
+
+
+def test_rpl005_clean_shard_map_with_mesh_invariant_rng(tmp_path):
+    findings, _ = lint_snippet(tmp_path, """
+        import jax
+        from repro import compat
+        from repro.runtime.elastic import mesh_invariant_rng
+        from jax.sharding import PartitionSpec as P
+
+        def build(mesh):
+            with mesh_invariant_rng():
+                key = jax.random.PRNGKey(0)
+                w = jax.random.normal(key, (8, 8))
+            step = compat.shard_map(lambda x: x, mesh=mesh,
+                                    in_specs=(P(),), out_specs=P())
+            return step(w)
+    """)
+    assert findings == []
+
+
 # ---------------------------------------------------------------------------
 # driver mechanics + self-run
 # ---------------------------------------------------------------------------

@@ -526,6 +526,36 @@ def test_lm_swa_ring_cache_admission():
         assert tokens == ref
 
 
+def test_lm_single_admission_prefills_one_row():
+    """A lone admission into an 8-slot pool must prefill a 1-row batch
+    (pad-to-batch-sub-bucket), not n_slots rows — with the same tokens
+    as the dedicated single-slot decode.  serve() pushes prompts one at
+    a time, so each admission is its own 1-row dispatch; a wider
+    admission group (slots freed in bulk) pads to the smallest covering
+    sub-bucket."""
+    cfg = get_config("chatglm3-6b").tiny()
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    program = LmProgram(cfg, cache_len=24, max_new=4)
+    engine = LmEngine(EngineConfig(program, n_slots=8), params)
+    assert engine._batch_buckets == (1, 2, 4, 8)
+    rng = np.random.default_rng(5)
+    shapes = []
+    orig = engine._jit_prefill
+    engine._jit_prefill = (lambda p, t, l:
+                           (shapes.append(tuple(t.shape)) or orig(p, t, l)))
+    lone = rng.integers(1, cfg.vocab_size, 5)
+    got = engine.serve([lone])
+    assert shapes == [(1, 8)]
+    assert got[0] == LmEngine(EngineConfig(program, n_slots=1),
+                              params).serve([lone])[0]
+    # sequential pushes admit one by one: three 1-row prefills, never
+    # an n_slots-row dispatch; a 3-wide group would pad to bucket 4
+    shapes.clear()
+    engine.serve([rng.integers(1, cfg.vocab_size, n) for n in (3, 5, 7)])
+    assert shapes == [(1, 8)] * 3
+    assert next(b for b in engine._batch_buckets if b >= 3) == 4
+
+
 def test_lm_bucketed_prefill_bounds_jit_entries(compile_budget):
     """Staggered admissions with MANY distinct prompt lengths compile at
     most len(program.buckets()) prefill jit entries (pad-to-bucket +

@@ -26,6 +26,10 @@ multi_device = pytest.mark.skipif(
     jax.device_count() < 2,
     reason="needs >= 2 devices (XLA_FLAGS=--xla_force_host_platform_"
            "device_count=N)")
+multi_device4 = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=N)")
 
 
 def _utts(words, n=3):
@@ -241,6 +245,151 @@ def test_sharded_engine_prepared_int8_parity_d2():
 
 
 # ---------------------------------------------------------------------------
+# 2D ('data','model') mesh: slot pool sharded on 'data'
+# ---------------------------------------------------------------------------
+def test_engine_config_rejects_unknown_mesh_axes():
+    tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
+    program = AsrProgram(tds_cfg, lex, lm, dec_cfg=dec_cfg)
+    mesh = jax.make_mesh((1, 1), ("replica", "model"))
+    with pytest.raises(ValueError, match="axes"):
+        EngineConfig(program, mesh=mesh)
+
+
+def test_mesh_1x1_2d_wrapper_matches_unsharded_bitwise():
+    """A 1x1 ('data','model') mesh runs the ENTIRE 2D machinery on a
+    1-device host — shard-aligned grouped assembly, -1 pad rows,
+    axis_index slot localization, drop-mode scatter-back — and both
+    axes are width 1, so it must reproduce the unsharded engine bitwise
+    (scores included) with the same step schedule."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ref, words = asr_demo_engine(2)
+    shd, _ = asr_demo_engine(2, mesh=mesh)
+    assert shd._data_axis == "data" and shd._n_data == 1
+    utts = _utts(words, 3)
+    for ra, rb in zip(ref.serve(utts), shd.serve(utts)):
+        assert ra["words"].tolist() == rb["words"].tolist()
+        assert ra["tokens"].tolist() == rb["tokens"].tolist()
+        assert ra["score"] == rb["score"]
+    assert ref.step_shapes == shd.step_shapes
+
+
+@multi_device
+def test_engine_config_rejects_indivisible_data_axis():
+    """n_slots must split evenly over the data axis: each shard owns
+    n_slots/n_data slots end-to-end."""
+    tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
+    program = AsrProgram(tds_cfg, lex, lm, dec_cfg=dec_cfg)
+    mesh = jax.make_mesh((2, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="divide evenly"):
+        EngineConfig(program, n_slots=3, mesh=mesh)
+
+
+@multi_device
+def test_assemble_batch_is_shard_aligned():
+    """With a 2-wide data axis over 4 slots (2 slots/shard), eligible
+    slots {0,1,3} must assemble into per-shard row blocks: shard 0's
+    slots at rows [0, bloc), shard 1's at [bloc, 2*bloc), pad rows
+    zero-filled with index -1 (dropped on scatter-back), and the
+    consumed samples retired from the slot buffers."""
+    mesh = jax.make_mesh((2, 1), ("data", "model"))
+    engine, _ = asr_demo_engine(4, mesh=mesh)
+    assert engine._slots_per_shard == 2
+    for s in (0, 1, 3):
+        engine.feed_slot(s, np.full((engine._need,), s + 1.0, np.float32))
+        assert engine.slot_windows(s) == 1
+    batch, idx = engine._assemble_batch([0, 1, 3], 1)
+    # largest group (shard 0) has 2 slots -> bloc=2 -> b = 2*2
+    assert batch.shape == (4, 1, engine._need)
+    assert idx.tolist() == [0, 1, 3, -1]
+    np.testing.assert_array_equal(batch[0], 1.0)
+    np.testing.assert_array_equal(batch[1], 2.0)
+    np.testing.assert_array_equal(batch[2], 4.0)      # slot 3 -> row bloc+0
+    np.testing.assert_array_equal(batch[3], 0.0)      # pad row: zeros
+    for s in (0, 1, 3):                               # windows retired
+        assert engine.slot_windows(s) == 0
+
+
+@multi_device
+def test_slot_buckets_are_per_shard_sizes():
+    """Slot buckets bucket the LOCAL per-shard group size, so every
+    global sub-batch b = bloc * n_data is a multiple of n_data."""
+    mesh = jax.make_mesh((2, 1), ("data", "model"))
+    engine, words = asr_demo_engine(4, mesh=mesh)
+    assert engine._slot_buckets[-1] == engine._slots_per_shard
+    engine.serve(_utts(words, 3))
+    assert all(b % 2 == 0 for (_, b, _) in engine.step_shapes), \
+        engine.step_shapes
+
+
+@multi_device
+def test_data_sharded_engine_transcript_parity_d2():
+    """Data-only sharding (2x1) re-partitions identical per-slot compute
+    across devices — transcripts AND scores stay bitwise."""
+    mesh = jax.make_mesh((2, 1), ("data", "model"))
+    ref, words = asr_demo_engine(4)
+    shd, _ = asr_demo_engine(4, mesh=mesh)
+    utts = _utts(words, 4)
+    for ra, rb in zip(ref.serve(utts), shd.serve(utts)):
+        assert ra["words"].tolist() == rb["words"].tolist()
+        assert ra["tokens"].tolist() == rb["tokens"].tolist()
+
+
+@multi_device4
+def test_2d_mesh_engine_transcript_parity_d4():
+    """The issue's acceptance case: a (2,2) mesh over 4 devices decodes
+    bitwise-identical transcripts to mesh=None (scores shift within
+    float tolerance from the model-axis psum reduction order)."""
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    ref, words = asr_demo_engine(4)
+    shd, _ = asr_demo_engine(4, mesh=mesh)
+    utts = _utts(words, 4)
+    for ra, rb in zip(ref.serve(utts), shd.serve(utts)):
+        assert ra["words"].tolist() == rb["words"].tolist()
+        assert ra["tokens"].tolist() == rb["tokens"].tolist()
+        assert abs(ra["score"] - rb["score"]) < 1e-3
+
+
+@multi_device
+def test_overlap_psum_matches_sync_engine():
+    """The latency-hiding chunked-psum FC path must decode the same
+    transcripts as the sync psum reference (chunking splits the output
+    columns, so only reduction order can differ)."""
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    sync, words = asr_demo_engine(2, mesh=mesh)
+    ovl, _ = asr_demo_engine(2, mesh=mesh, overlap_psum=True)
+    utts = _utts(words, 3)
+    for ra, rb in zip(sync.serve(utts), ovl.serve(utts)):
+        assert ra["words"].tolist() == rb["words"].tolist()
+        assert ra["tokens"].tolist() == rb["tokens"].tolist()
+        assert abs(ra["score"] - rb["score"]) < 1e-3
+
+
+@multi_device
+def test_psum_overlap_matmul_matches_sync():
+    from repro import compat
+    from repro.kernels import ops
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((2,), ("model",))
+    R = np.random.RandomState(0)
+    x = jnp.asarray(R.randn(4, 32), jnp.float32)
+    w = jnp.asarray(R.randn(32, 24), jnp.float32)
+
+    def body(x, wloc):
+        xloc = ops.shard_local_cols(x, wloc.shape[0], "model")
+        sync = jax.lax.psum(xloc @ wloc, "model")
+        ovl = ops.psum_overlap_matmul(xloc, wloc, "model")
+        return sync, ovl
+
+    f = jax.jit(compat.shard_map(body, mesh=mesh,
+                                 in_specs=(P(), P("model", None)),
+                                 out_specs=(P(), P()), check_vma=False))
+    sync, ovl = f(x, w)
+    np.testing.assert_allclose(np.asarray(ovl), np.asarray(sync),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # subprocess: full parity sweep on a forced 8-device host (slow suite)
 # ---------------------------------------------------------------------------
 SUBPROC_SHARDED = textwrap.dedent("""
@@ -254,13 +403,18 @@ SUBPROC_SHARDED = textwrap.dedent("""
     data = SyntheticASR(words)
     utts = [data.utterance(i)["audio"] for i in range(4)]
     want = ref.serve(utts)
-    for d in (2, 4):
+    for d in (2, 4, "2x2", "2x4", "4x2"):
         shd, _ = asr_demo_engine(4, mesh=serve_mesh(d))
         got = shd.serve(utts)
         for i, (a, b) in enumerate(zip(want, got)):
             assert a["words"].tolist() == b["words"].tolist(), (d, i)
             assert a["tokens"].tolist() == b["tokens"].tolist(), (d, i)
             assert abs(a["score"] - b["score"]) < 1e-3, (d, i)
+    ovl, _ = asr_demo_engine(4, mesh=serve_mesh("2x2"), overlap_psum=True)
+    got = ovl.serve(utts)
+    for i, (a, b) in enumerate(zip(want, got)):
+        assert a["words"].tolist() == b["words"].tolist(), ("ovl", i)
+        assert abs(a["score"] - b["score"]) < 1e-3, ("ovl", i)
     print("SHARDED_OK")
 """)
 
