@@ -54,23 +54,32 @@ def _pct(seconds: list, q: float) -> float:
 
 
 async def _run_stream(host: str, port: int, audio: np.ndarray,
-                      chunk: int, stagger_s: float, realtime: bool) -> dict:
-    """One client: staggered open, chunked pushes with a poll after
-    each, finish; returns client-observed latencies (or the
-    rejection)."""
+                      chunk: int, stagger_s: float, realtime: bool,
+                      retries: int = 0, backoff: float = 0.05,
+                      seed: int = 0) -> dict:
+    """One client: staggered open (with optional jittered retry on
+    503), chunked pushes with a poll after each, finish; returns
+    client-observed latencies (or the rejection / fault)."""
     from repro.serving.server import AsrClient, ServerRejected
 
     await asyncio.sleep(stagger_s)
     t0 = time.perf_counter()
     try:
         try:
-            client = await AsrClient.open(host, port)
+            client = await AsrClient.open(host, port, retries=retries,
+                                          backoff=backoff, seed=seed)
         except ServerRejected:
             return {"rejected": True}
         first = None
         for off in range(0, len(audio), chunk):
-            await client.push(audio[off:off + chunk])
+            res = await client.push(audio[off:off + chunk])
+            if res.get("error"):
+                return {"rejected": False, "faulted": True,
+                        "error": res["error"]}
             res = await client.poll()
+            if res.get("error"):
+                return {"rejected": False, "faulted": True,
+                        "error": res["error"]}
             if first is None and res["steps"] > 0:
                 first = time.perf_counter() - t0
             if realtime:
@@ -78,11 +87,14 @@ async def _run_stream(host: str, port: int, audio: np.ndarray,
         t_fin = time.perf_counter()
         final = await client.finish()
         t_end = time.perf_counter()
+        if final.get("error"):
+            return {"rejected": False, "faulted": True,
+                    "error": final["error"]}
     except ConnectionError:
         return {"rejected": True}
     if first is None:            # tail-flush produced the only step
         first = t_end - t0
-    return {"rejected": False, "first_result_s": first,
+    return {"rejected": False, "faulted": False, "first_result_s": first,
             "finalize_s": t_end - t_fin, "e2e_s": t_end - t0,
             "audio_s": len(audio) / 16000.0, "steps": final["steps"]}
 
@@ -113,7 +125,8 @@ async def _run_load(args) -> dict:
         t0 = time.perf_counter()
         outs = await asyncio.gather(*[
             _run_stream(server.host, server.port, audio, chunk,
-                        i * args.stagger_ms / 1000.0, args.realtime)
+                        i * args.stagger_ms / 1000.0, args.realtime,
+                        retries=args.retries, backoff=args.backoff, seed=i)
             for i, audio in enumerate(utts)])
         wall = time.perf_counter() - t0
         metrics = (await fetch_metrics(server.host, server.port))["asr"]
@@ -128,8 +141,10 @@ async def _run_load(args) -> dict:
 def report(args, res: dict) -> None:
     g = args.group
     outs, wall, metrics = res["outs"], res["wall"], res["metrics"]
-    done = [o for o in outs if not o["rejected"]]
-    n_rejected = len(outs) - len(done)
+    n_faulted = sum(1 for o in outs if o.get("faulted"))
+    done = [o for o in outs
+            if not o["rejected"] and not o.get("faulted")]
+    n_rejected = len(outs) - len(done) - n_faulted
     assert done, "every stream was rejected — raise --max-queue"
 
     row(f"{g}_streams", len(outs))
@@ -144,14 +159,18 @@ def report(args, res: dict) -> None:
     row(f"{g}_throughput_x_realtime",
         sum(o["audio_s"] for o in done) / wall)
     row(f"{g}_rejection_rate", n_rejected / len(outs))
+    row(f"{g}_faulted", n_faulted)
     row(f"{g}_max_queue_depth", metrics["queue"]["max_depth"])
     row(f"{g}_occupancy", metrics["steps"]["occupancy"] or 0.0)
     if args.max_queue is not None:
         # the backpressure invariant the SLO story rests on (also
         # pinned by tests): overload bounds the queue, never grows it
         assert metrics["queue"]["max_depth"] <= args.max_queue, metrics
-        assert res["rejected_in_run"] == n_rejected, \
-            (metrics["sessions"], n_rejected)
+        if args.retries == 0:
+            # with retries, each 503'd attempt bumps the server-side
+            # rejected counter, so it can exceed client-observed fails
+            assert res["rejected_in_run"] == n_rejected, \
+                (metrics["sessions"], n_rejected)
 
 
 def main(argv=None):
@@ -171,6 +190,12 @@ def main(argv=None):
                     help="warmup streams run (and discarded) before the "
                          "measured wave, to trace the jit step buckets "
                          "(default: one per slot)")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="client-side retry attempts on 503/connection "
+                         "failure (jittered exponential backoff; "
+                         "default: fail fast, counted as rejection)")
+    ap.add_argument("--backoff", type=float, default=0.05,
+                    help="base backoff delay in seconds for --retries")
     ap.add_argument("--realtime", action="store_true",
                     help="pace each stream at realtime (sleep one chunk "
                          "duration per push) instead of replaying as "

@@ -24,7 +24,8 @@ RULE_DOCS = {
               "twin + parity test + shape-guarded grid assumptions",
     "RPL003": "aliasing: engine slot state escapes without copy_result",
     "RPL004": "thread discipline: @worker_only engine method called "
-              "from an asyncio handler outside a worker thunk",
+              "from an asyncio handler (or a supervisor/watchdog entry "
+              "point) outside a worker thunk",
     "RPL005": "RNG discipline: sharded compute (out_shardings jit or "
               "shard_map) + PRNGKey without mesh_invariant_rng()",
 }

@@ -425,7 +425,9 @@ def rule_rpl002(ctx: Context) -> List[Finding]:
 # `_prepared` (sharded int8 weight shards) and `_slot_steps` (per-slot
 # step counters) joined with the 2D-mesh sharded engine step
 _STATE_ATTRS = {"result", "_slot_bufs", "_beam", "_stream_state", "_gen",
-                "_tokens", "cache", "_prepared", "_slot_steps"}
+                "_tokens", "cache", "_prepared", "_slot_steps",
+                "_fault_log"}   # _fault_log: per-engine fault forensics
+                                # (PR 9 quarantine layer)
 # engine receivers state may hang off
 _ENGINE_NAMES = {"self", "eng", "engine", "sess", "session"}
 # engine methods whose return values are materialized views over
@@ -505,15 +507,23 @@ def rule_rpl003(mod: ParsedModule, ctx: Context) -> List[Finding]:
 # RPL004 — thread discipline
 # ---------------------------------------------------------------------------
 
+# sync functions that ALSO run on the event-loop thread (not the
+# engine worker): supervisor / watchdog / health entry points, matched
+# by name.  They observe, abandon, and restart workers, so a direct
+# @worker_only call from one of them is the same cross-thread race an
+# asyncio handler would have.
+_LOOP_SIDE_NAMES = ("supervis", "watchdog", "healthz")
+
+
 def rule_rpl004(mod: ParsedModule, ctx: Context) -> List[Finding]:
     if not ctx.worker_only_names:
         return []
     findings: List[Finding] = []
 
-    def scan(node: ast.AST, in_lambda: bool):
+    def scan(node: ast.AST, in_lambda: bool, where: str):
         for child in ast.iter_child_nodes(node):
             if isinstance(child, ast.Lambda):
-                scan(child, True)
+                scan(child, True, where)
                 continue
             if isinstance(child, ast.Call) and not in_lambda:
                 tail = _attr_tail(child.func)
@@ -522,14 +532,17 @@ def rule_rpl004(mod: ParsedModule, ctx: Context) -> List[Finding]:
                     findings.append(Finding(
                         mod.rel, child.lineno, child.col_offset, "RPL004",
                         f"@worker_only engine method `{tail}` called from "
-                        "an asyncio handler: only the engine's "
+                        f"{where}: only the engine's "
                         "EngineWorker thread may drive it — submit a "
                         "thunk via worker.call/submit instead"))
-            scan(child, in_lambda)
+            scan(child, in_lambda, where)
 
     for fn in ast.walk(mod.tree):
         if isinstance(fn, ast.AsyncFunctionDef):
-            scan(fn, False)
+            scan(fn, False, "an asyncio handler")
+        elif isinstance(fn, ast.FunctionDef) and \
+                any(k in fn.name.lower() for k in _LOOP_SIDE_NAMES):
+            scan(fn, False, f"supervisor/watchdog entry point `{fn.name}`")
     return findings
 
 

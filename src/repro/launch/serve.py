@@ -145,20 +145,27 @@ def asr_demo_system():
 
 def asr_demo_engine(n_slots: int, kernels: KernelPolicy = None,
                     mesh=None, max_queue=None,
-                    overlap_psum: bool = False) -> tuple:
+                    overlap_psum: bool = False,
+                    session_deadline=None, worker_watchdog=None,
+                    faults=None) -> tuple:
     """(engine, words): an AsrEngine over the demo system's program.
     `mesh` (see `serve_mesh`) shards the TDS FC/head weights over its
     'model' axis — and, with a 'data' axis, the slot pool — running the
     fused step under shard_map; `overlap_psum` enables the
     latency-hiding psum split on the sharded contractions; `max_queue`
-    is the admission backpressure bound (`EngineConfig.max_queue`)."""
+    is the admission backpressure bound (`EngineConfig.max_queue`);
+    `session_deadline`/`worker_watchdog`/`faults` are the
+    fault-tolerance knobs (see README "Fault tolerance")."""
     tds_cfg, words, lex, lm, params, dec_cfg = asr_demo_system()
     program = AsrProgram(tds_cfg, lex, lm, dec_cfg=dec_cfg,
                         ).with_beam_width(25.0)
     engine = AsrEngine(EngineConfig(program, n_slots=n_slots,
                                     kernels=kernels or KernelPolicy(),
                                     mesh=mesh, max_queue=max_queue,
-                                    overlap_psum=overlap_psum),
+                                    overlap_psum=overlap_psum,
+                                    session_deadline=session_deadline,
+                                    worker_watchdog=worker_watchdog,
+                                    faults=faults),
                        params)
     return engine, words
 
@@ -226,36 +233,63 @@ def serve_network(args):
     engines (ASR always; plus a tiny LM engine) and serve until
     interrupted.  Each engine's step loop runs on its own EngineWorker
     thread, so sessions stream over HTTP chunked transfer while the
-    fused steps batch across them (see repro.serving.server)."""
+    fused steps batch across them (see repro.serving.server).
+
+    SIGTERM/SIGINT trigger a graceful drain: the listener stops
+    accepting, in-flight sessions run to their final result
+    (bounded by --drain-timeout), then the workers stop — the contract
+    a rolling restart behind a load balancer needs."""
     import asyncio
+    import signal
 
     from repro.serving.server import EngineServer
 
     asr_engine, _ = asr_demo_engine(args.streams, _policy(args),
                                     serve_mesh(args.mesh),
                                     max_queue=args.max_queue,
-                                    overlap_psum=args.overlap_psum)
+                                    overlap_psum=args.overlap_psum,
+                                    session_deadline=args.session_deadline,
+                                    worker_watchdog=args.watchdog)
     lm_cfg = get_config(args.arch).tiny()
     lm = build_lm(lm_cfg, None)
     lm_program = LmProgram(lm_cfg, cache_len=args.prompt_len + args.max_new,
                            max_new=args.max_new)
     lm_engine = LmEngine(
         EngineConfig(lm_program, n_slots=args.slots, kernels=_policy(args),
-                     max_queue=args.max_queue),
+                     max_queue=args.max_queue,
+                     session_deadline=args.session_deadline,
+                     worker_watchdog=args.watchdog),
         lm.init(jax.random.PRNGKey(0)))
 
     async def run():
         server = EngineServer(asr_engine=asr_engine, lm_engine=lm_engine,
-                              host=args.host, port=args.port)
+                              host=args.host, port=args.port,
+                              asr_idle_timeout=args.idle_timeout)
         await server.start()
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                loop.add_signal_handler(sig, stop.set)
+            except (NotImplementedError, RuntimeError):
+                pass             # platform without loop signal handlers
         print(f"serving ASR ({args.streams} slots) + LM ({args.slots} "
               f"slots) on http://{server.host}:{server.port} "
-              f"(max_queue={args.max_queue}); POST /asr, POST /lm, "
-              f"GET /metrics")
+              f"(max_queue={args.max_queue}, watchdog={args.watchdog}, "
+              f"session_deadline={args.session_deadline}); POST /asr, "
+              f"POST /lm, GET /metrics, GET /healthz")
         try:
-            await server.serve_forever()
+            serve = asyncio.ensure_future(server.serve_forever())
+            stopper = asyncio.ensure_future(stop.wait())
+            await asyncio.wait({serve, stopper},
+                               return_when=asyncio.FIRST_COMPLETED)
+            serve.cancel()
+            stopper.cancel()
+            if stop.is_set():
+                print("signal received: draining in-flight sessions ...")
         finally:
-            await server.aclose()
+            await server.aclose(drain=True, timeout=args.drain_timeout)
+            print("drained; server stopped")
 
     try:
         asyncio.run(run())
@@ -310,6 +344,22 @@ def main(argv=None):
                     help="admission backpressure bound: with every slot "
                          "busy and this many sessions queued, new "
                          "sessions get HTTP 503 (default: unbounded)")
+    ap.add_argument("--watchdog", type=float, default=None,
+                    help="--serve: seconds an engine worker's heartbeat "
+                         "may age before the supervisor declares it "
+                         "wedged and restarts it (default: only DEAD "
+                         "threads restart)")
+    ap.add_argument("--session-deadline", type=float, default=None,
+                    help="--serve: seconds a session may live from "
+                         "open() before the pump reaps it "
+                         "(DeadlineExceeded; default: no deadline)")
+    ap.add_argument("--idle-timeout", type=float, default=None,
+                    help="--serve: seconds /asr waits for the next "
+                         "command chunk before freeing a silent "
+                         "client's slot (default: wait forever)")
+    ap.add_argument("--drain-timeout", type=float, default=30.0,
+                    help="--serve: bound on the SIGTERM graceful drain "
+                         "(seconds; in-flight sessions finishing)")
     args = ap.parse_args(argv)
     if args.serve:
         return serve_network(args)

@@ -15,22 +15,38 @@ overload into typed `AdmissionRejected` backpressure (HTTP 503), and
 `Engine.metrics` (an `EngineMetrics`) tracks first-result / finalize
 latency, queue depth, and step-shape occupancy.
 
+Fault tolerance (README "Fault tolerance"): per-session quarantine
+(`SessionFaulted` / `DeadlineExceeded`, bisection isolation of poison
+slots in a fused step), worker supervision (heartbeat watchdog +
+restart, `WorkerDied`, `GET /healthz`), graceful drain
+(`EngineServer.aclose(drain=True)`), and the deterministic
+fault-injection harness (`FaultPolicy`/`FaultSpec` in
+repro.serving.faults, driven by tests/test_faults.py).
+
 The deprecated command-API shims (`ASRPU`, `MultiStreamASRPU` in
 repro.core.scheduler) are thin wrappers over `AsrEngine`.
 """
 from repro.serving.asr import AsrEngine
 from repro.serving.config import (AsrProgram, EngineConfig, LmProgram,
                                   Program, make_engine)
-from repro.serving.engine import (AdmissionRejected, Engine, Session,
+from repro.serving.engine import (AdmissionRejected, DeadlineExceeded,
+                                  Engine, Session, SessionFaulted,
                                   copy_result)
+from repro.serving.faults import (FaultPolicy, FaultSpec, InjectedFault,
+                                  WorkerKilled)
 from repro.serving.lm import LmEngine
 from repro.serving.metrics import EngineMetrics
-from repro.serving.server import (AsrClient, EngineServer, ServerRejected,
-                                  fetch_metrics, lm_generate)
+from repro.serving.server import (AsrClient, EngineServer, ProtocolError,
+                                  ServerRejected, WorkerDied,
+                                  fetch_healthz, fetch_metrics,
+                                  lm_generate)
 
 __all__ = [
-    "AdmissionRejected", "AsrClient", "AsrEngine", "AsrProgram", "Engine",
-    "EngineConfig", "EngineMetrics", "EngineServer", "LmEngine",
-    "LmProgram", "Program", "ServerRejected", "Session", "copy_result",
-    "fetch_metrics", "lm_generate", "make_engine",
+    "AdmissionRejected", "AsrClient", "AsrEngine", "AsrProgram",
+    "DeadlineExceeded", "Engine", "EngineConfig", "EngineMetrics",
+    "EngineServer", "FaultPolicy", "FaultSpec", "InjectedFault",
+    "LmEngine", "LmProgram", "Program", "ProtocolError", "ServerRejected",
+    "Session", "SessionFaulted", "WorkerDied", "WorkerKilled",
+    "copy_result", "fetch_healthz", "fetch_metrics", "lm_generate",
+    "make_engine",
 ]

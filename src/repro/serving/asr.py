@@ -85,8 +85,8 @@ from repro.core import features
 from repro.models import tds
 from repro.analysis.guards import no_implicit_transfers
 from repro.serving.config import AsrProgram, EngineConfig
-from repro.serving.engine import (Engine, Session, copy_result,
-                                 worker_only)
+from repro.serving.engine import (Engine, Session, SessionFaulted,
+                                 copy_result, worker_only)
 
 
 def empty_hypothesis() -> dict:
@@ -392,15 +392,101 @@ class AsrEngine(Engine):
                 key=lambda b: (b * int((avail >= b).sum()), b))
         slots = [s for s in range(self.n_slots) if avail[s] >= w]
         self._ensure_state()
+        self._step_isolated(slots, w)
+        return True
+
+    def _step_isolated(self, slots, w) -> None:
+        """Run one gathered step with poison-slot isolation.  On
+        failure the step is REPLAYED on bisected halves in probe mode
+        (`_step_slots(..., commit=False)`) until the failure pins to
+        single slots — probes commit nothing, and assembly is
+        non-destructive, so every replay sees the exact same inputs.
+        The pinned sessions alone are evicted with a typed
+        `SessionFaulted`, then the surviving slots step TOGETHER in one
+        committed call: the survivor set pads to the same slot bucket a
+        fault-free pump would use, and each batch row depends only on
+        its own slot, so survivor trajectories land bitwise identical
+        to a fault-free run.  (Committing the probe halves instead
+        would step survivors at smaller batch shapes, whose low-order
+        float bits differ.)  A failure no probe can reproduce gets one
+        committed full-set retry (a transient, not a poison slot); a
+        second failure propagates to `_pump_once`'s pool quarantine.
+        Slot-level callers (the deprecated command shims) have no
+        session to attribute a pinned fault to, so the fault re-raises
+        there."""
+        try:
+            self._step_slots(slots, w)
+            return
+        except Exception as exc:
+            if len(slots) == 1:
+                sess = self._owner[slots[0]]
+                if sess is None:      # slot-level API: nothing to evict
+                    raise
+                self._fault_session(sess, SessionFaulted(
+                    sess.sid, f"decoding step failed: {exc}", cause=exc))
+                return
+            root = exc
+        mid = len(slots) // 2              # the full set just failed:
+        bad = (self._probe_step_faults(slots[:mid], w)     # probe halves
+               + self._probe_step_faults(slots[mid:], w))
+        if not bad:
+            # unreproducible under probes: transient — one committed
+            # full-set retry, then give up to the pool quarantine
+            try:
+                self._step_slots(slots, w)
+            except Exception:
+                raise root
+            return
+        for s, exc in bad:
+            sess = self._owner[s]
+            if sess is None:          # slot-level API: nothing to evict
+                raise exc
+            self._fault_session(sess, SessionFaulted(
+                sess.sid, f"decoding step failed: {exc}", cause=exc))
+        survivors = [s for s in slots if s not in {b for b, _ in bad}]
+        if survivors:
+            self._step_isolated(survivors, w)
+
+    def _probe_step_faults(self, slots, w):
+        """Bisection probe: non-committing `_step_slots` replays that
+        pin a gathered-step failure to its slots.  Returns
+        [(slot, exc)] for every slot whose singleton replay fails."""
+        try:
+            self._step_slots(slots, w, commit=False)
+            return []
+        except Exception as exc:
+            if len(slots) == 1:
+                return [(slots[0], exc)]
+            mid = len(slots) // 2
+            return (self._probe_step_faults(slots[:mid], w)
+                    + self._probe_step_faults(slots[mid:], w))
+
+    def _step_slots(self, slots, w, commit: bool = True) -> None:
+        """One fused step over exactly `slots` at window count `w`,
+        committed ONLY on success: the jitted step is functional (new
+        state comes back as fresh arrays), so a raise before the final
+        assignments leaves pool state, sample buffers, and metrics
+        exactly as they were — the invariant `_step_isolated`'s
+        bisection replay depends on.  `commit=False` runs the step and
+        discards the result (the isolation probe)."""
         batch, idx = self._assemble_batch(slots, w)
         b = idx.shape[0]
+        if self._faults is not None:
+            self._faults.check(
+                "asr_step", slots=tuple(slots),
+                sids=tuple(self._owner[s].sid for s in slots
+                           if self._owner[s] is not None))
         # transfer-guarded: the batch/idx uploads are the ONLY intended
         # host->device traffic per step; anything implicit (a stray
         # numpy weight, a scalar readback inside dispatch) is a bug
         with no_implicit_transfers():
-            self._stream_state, self._beam = self._jit_step(
+            new_ss, new_beam = self._jit_step(
                 self.params, self._prepared, self._stream_state, self._beam,
                 jnp.asarray(batch), jnp.asarray(idx))
+        if not commit:
+            return
+        self._stream_state, self._beam = new_ss, new_beam
+        self._retire(slots, w)
         self._slot_steps[slots] += w
         self.n_steps += 1
         self.step_shapes.append((len(slots), b, w))
@@ -408,12 +494,14 @@ class AsrEngine(Engine):
         for s in slots:
             if self._owner[s] is not None:      # slot-level API has no owner
                 self.metrics.on_first_result(self._owner[s])
-        return True
 
     def _assemble_batch(self, slots, w):
         """Gather each eligible slot's next `w` buffered windows into a
         bucket-padded (b, w, samples_per_window) batch plus its (b,)
-        slot-index vector, retiring the consumed samples.
+        slot-index vector.  Assembly is NON-destructive — the consumed
+        samples are retired by `_retire` only after the fused step
+        succeeds, so a faulted step can be replayed on bisected halves
+        from unchanged buffers.
 
         Unsharded / 1D mesh: b is the smallest pow-2 slot bucket
         covering len(slots); padding duplicates row 0 (its repeated
@@ -450,12 +538,19 @@ class AsrEngine(Engine):
 
     def _fill_row(self, batch, row, slot, w):
         """Extract slot's next w windows into one batch row (window by
-        window, exactly as w=1 steps would see them) and retire the
-        consumed samples, keeping the MFCC framing overlap buffered."""
+        window, exactly as w=1 steps would see them).  The slot buffer
+        is NOT consumed here — see `_retire`."""
         for i in range(w):
             off = i * self._spp
             batch[row, i] = self._slot_bufs[slot][off:off + self._need]
-        self._slot_bufs[slot] = self._slot_bufs[slot][w * self._spp:]
+
+    def _retire(self, slots, w):
+        """Retire the samples a successful step consumed, keeping the
+        MFCC framing overlap buffered.  Separate from `_fill_row` so a
+        step that FAULTS retires nothing and the bisection retry sees
+        the identical buffers."""
+        for s in slots:
+            self._slot_bufs[s] = self._slot_bufs[s][w * self._spp:]
 
     def _flush_finished_tails(self) -> None:
         """Zero-pad the trailing partial window of finished slots so the
@@ -497,6 +592,10 @@ class AsrEngine(Engine):
     # ---- session mechanics -------------------------------------------
     def _push(self, session: Session, chunk) -> None:
         chunk = np.asarray(chunk, np.float32)
+        # reject poison input BEFORE buffering: the raise reaches only
+        # the pushing caller, nothing was mutated, and the session stays
+        # usable for well-formed pushes
+        self.program.validate_input(chunk)
         if session.admitted:
             self.feed_slot(session.slot, chunk)
         elif session._pending is None:
@@ -539,6 +638,10 @@ class AsrEngine(Engine):
         res = self.slot_best(slot, final=True)
         res["steps"] = int(self._slot_steps[slot])
         return copy_result(res)   # stored as session.result: must own it
+
+    def _release_slot(self, slot: int) -> None:
+        # eviction mid-utterance: same scrub as an utterance boundary
+        self.reset_slot(slot)
 
     # ---- whole-utterance convenience ---------------------------------
     def serve(self, utterances) -> List[dict]:

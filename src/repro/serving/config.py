@@ -14,6 +14,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple, Union
 
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
@@ -52,6 +53,11 @@ class AsrProgram:
     # the paper's DecodingStep/best commands have no end-of-input signal
     # and only ever decode whole windows.
     flush_tail: bool = True
+    # Per-push input cap (samples): one push may not exceed this many
+    # audio samples (default ~60 s at the paper's 16 kHz).  Admission
+    # validation, not a stream-length bound — a session may push many
+    # capped chunks.
+    max_push_samples: int = 960_000
 
     def step_buckets(self) -> Tuple[int, ...]:
         """Descending window counts a fused step may take (one jit entry
@@ -96,6 +102,29 @@ class AsrProgram:
                     prepared, shlib.tds_prepared_specs(self.tds_cfg, mesh),
                     mesh)
         return params, prepared
+
+    def validate_input(self, chunk: np.ndarray) -> None:
+        """Admission-time validation of one pushed audio chunk: the
+        fused step trusts its inputs (a NaN sample poisons the slot's
+        beam scores irrecoverably and a huge chunk is an allocation
+        attack), so the session front-end rejects bad input HERE —
+        before anything is buffered — instead of letting it fault the
+        co-batched step later."""
+        chunk = np.asarray(chunk)
+        if chunk.ndim != 1:
+            raise ValueError(
+                f"audio chunk must be 1-D samples, got shape "
+                f"{chunk.shape}")
+        if not np.issubdtype(chunk.dtype, np.floating):
+            raise ValueError(
+                f"audio chunk must be float samples, got dtype "
+                f"{chunk.dtype}")
+        if chunk.shape[0] > self.max_push_samples:
+            raise ValueError(
+                f"audio chunk of {chunk.shape[0]} samples exceeds "
+                f"max_push_samples={self.max_push_samples}")
+        if chunk.shape[0] and not np.isfinite(chunk).all():
+            raise ValueError("audio chunk contains NaN/Inf samples")
 
     def with_beam_width(self, beam: float) -> "AsrProgram":
         """ConfigureBeamWidth as a pure derivation, not a mutation."""
@@ -155,6 +184,28 @@ class LmProgram:
                 f"prompt_len={prompt_len} + max_new={self.max_new} exceeds "
                 f"cache_len={self.cache_len}")
 
+    def validate_input(self, prompt: np.ndarray) -> None:
+        """Admission-time validation of a pushed prompt: token ids must
+        be an integral 1-D vector inside the vocabulary — an
+        out-of-range id indexes garbage through the embedding gather
+        (or faults the device) inside the shared prefill batch, so it
+        is rejected before it can be co-batched."""
+        prompt = np.asarray(prompt)
+        if prompt.ndim != 1:
+            raise ValueError(
+                f"prompt must be a 1-D token vector, got shape "
+                f"{prompt.shape}")
+        if not np.issubdtype(prompt.dtype, np.integer):
+            raise ValueError(
+                f"prompt must hold integer token ids, got dtype "
+                f"{prompt.dtype}")
+        self.validate_prompt(prompt.shape[0])
+        vocab = self.model_cfg.vocab_size
+        if prompt.size and (prompt.min() < 0 or prompt.max() >= vocab):
+            raise ValueError(
+                f"prompt token ids must be in [0, {vocab}), got range "
+                f"[{prompt.min()}, {prompt.max()}]")
+
 
 Program = Union[AsrProgram, LmProgram]
 
@@ -197,13 +248,34 @@ class EngineConfig:
     `AdmissionRejected` (a typed error the network front-end maps to
     503) instead of queueing unboundedly.  None (default) keeps the
     unbounded in-process behavior; 0 means "never queue — reject unless
-    a slot is free"."""
+    a slot is free".
+
+    Fault-tolerance knobs (see README "Fault tolerance"):
+
+    `session_deadline` — wall-clock seconds a session may live from
+    `open()` before the pump reaps it (`DeadlineExceeded`, a typed
+    `SessionFaulted`), freeing its slot/queue entry.  None = no
+    deadline.
+
+    `worker_watchdog` — seconds an `EngineWorker`'s heartbeat may age
+    before the server's supervisor declares the worker wedged, fails
+    its in-flight futures, rebuilds the pool, and restarts the thread.
+    None disables the wedge detection (a DEAD thread is still detected
+    and restarted).
+
+    `faults` — an armed `repro.serving.faults.FaultPolicy` consulted at
+    the engine's injection sites; None (production) skips every check.
+    """
     program: Program
     n_slots: int = 1
     kernels: KernelPolicy = field(default_factory=KernelPolicy)
     mesh: Optional[Mesh] = None
     max_queue: Optional[int] = None
     overlap_psum: bool = False
+    session_deadline: Optional[float] = None
+    worker_watchdog: Optional[float] = None
+    faults: Optional[object] = None    # FaultPolicy; object() keeps the
+                                       # config module import-light
 
     def __post_init__(self):
         if self.n_slots < 1:
@@ -211,6 +283,14 @@ class EngineConfig:
         if self.max_queue is not None and self.max_queue < 0:
             raise ValueError(
                 f"max_queue must be None or >= 0, got {self.max_queue}")
+        if self.session_deadline is not None and self.session_deadline <= 0:
+            raise ValueError(
+                f"session_deadline must be None or > 0, got "
+                f"{self.session_deadline}")
+        if self.worker_watchdog is not None and self.worker_watchdog <= 0:
+            raise ValueError(
+                f"worker_watchdog must be None or > 0, got "
+                f"{self.worker_watchdog}")
         if self.mesh is not None:
             if "model" not in self.mesh.axis_names:
                 raise ValueError(

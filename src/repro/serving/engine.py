@@ -77,6 +77,29 @@ class AdmissionRejected(RuntimeError):
         self.max_queue = max_queue
 
 
+class SessionFaulted(RuntimeError):
+    """Typed per-session failure: the engine evicted ONE session —
+    poison input isolated by bisection retry, a failed prefill, or a
+    whole-pool quarantine — without taking the pool down.  The session
+    handle raises this from `push`/`poll`/`finish`, done-watchers
+    resolve with it, and the network front-end maps it to an in-stream
+    error chunk (`/asr`) or a 500 (`/lm`).  `__cause__` carries the
+    original exception when one exists."""
+
+    def __init__(self, sid: int, reason: str,
+                 cause: Optional[BaseException] = None):
+        super().__init__(f"session {sid} faulted: {reason}")
+        self.sid = sid
+        self.reason = reason
+        if cause is not None:
+            self.__cause__ = cause
+
+
+class DeadlineExceeded(SessionFaulted):
+    """A session outlived `EngineConfig.session_deadline` and was reaped
+    by the pump to free its slot/queue entry."""
+
+
 class SessionQueue:
     """Order-preserving admission queue with O(1) removal.
 
@@ -134,6 +157,7 @@ class Session:
         self.slot: Optional[int] = None
         self.finished = False          # finish() called; no more input
         self.detached = False          # engine was reset under the session
+        self.fault: Optional[SessionFaulted] = None
         self.result: Optional[dict] = None
         self._pending = None           # mode-specific input awaiting a slot
         # metric timestamps, stamped by engine.metrics (see metrics.py)
@@ -148,7 +172,13 @@ class Session:
     def done(self) -> bool:
         return self.result is not None
 
+    @property
+    def faulted(self) -> bool:
+        return self.fault is not None
+
     def _check_attached(self):
+        if self.fault is not None:
+            raise self.fault
         if self.detached and not self.done:
             raise RuntimeError(
                 f"session {self.sid}: engine was reset; session detached")
@@ -164,7 +194,10 @@ class Session:
     def poll(self) -> dict:
         """Drive the engine and return this session's current output."""
         self._check_attached()
-        return self._engine._poll(self)
+        out = self._engine._poll(self)
+        if self.fault is not None:     # faulted during this very drive
+            raise self.fault
+        return out
 
     def finish(self, wait: bool = True) -> Optional[dict]:
         """End-of-input: flush, finalize, free the slot.  Returns the
@@ -178,6 +211,8 @@ class Session:
         self._engine.metrics.on_finish(self)
         if wait:
             self._engine._advance()
+            if self.fault is not None:  # faulted during this very drive
+                raise self.fault
         return None if self.result is None else copy_result(self.result)
 
     def __repr__(self):
@@ -194,6 +229,10 @@ class Engine:
         self.config = config
         self.n_slots: int = config.n_slots
         self.max_queue: Optional[int] = getattr(config, "max_queue", None)
+        self.session_deadline: Optional[float] = getattr(
+            config, "session_deadline", None)
+        self._faults = getattr(config, "faults", None)
+        self._fault_log: List[dict] = []   # bounded by _fault_session
         self.n_steps = 0               # fused steps taken since reset
         self._queue = SessionQueue()
         self._owner: List[Optional[Session]] = [None] * self.n_slots
@@ -230,11 +269,102 @@ class Engine:
     @worker_only
     def _advance(self) -> None:
         """Admit -> step -> harvest until no progress is possible."""
-        progressed = True
-        while progressed:
-            progressed = self._admit()
-            progressed |= self._step()
-            progressed |= self._harvest()
+        while self._pump_once():
+            pass
+
+    @worker_only
+    def _pump_once(self) -> bool:
+        """One quarantined admit -> step -> harvest round (the unit both
+        `_advance` and the network `EngineWorker` loop drive).
+
+        Fault containment is layered: the subclasses attribute step /
+        prefill failures to a single session where possible (bisection
+        retry in `AsrEngine._step_isolated` / `LmEngine._prefill_group`)
+        and evict only it; anything that still escapes here is an
+        UNATTRIBUTABLE pool failure — the pool state can no longer be
+        trusted, so every live session is faulted and the pool is
+        rebuilt (`_fail_all`).  Either way the pump survives: one bad
+        session or one bad round never kills the serve loop.
+        `BaseException`s (worker shutdown, injected `WorkerKilled`) pass
+        through — those model thread death, which only the worker
+        supervisor may handle."""
+        try:
+            did = self._admit()
+            did |= self._step()
+            did |= self._harvest()
+        except Exception as exc:
+            self._fail_all(exc)
+            did = False
+        return self._reap_deadlines() or did
+
+    @worker_only
+    def _fault_session(self, sess: Session, exc: SessionFaulted,
+                       release: bool = True) -> None:
+        """Evict ONE session with a typed fault: remove it from the
+        queue or its slot, record the fault on the handle (push/poll/
+        finish raise it; done-watchers resolve with it), and — when the
+        pool state is still trustworthy — release the slot for reuse.
+        `release=False` is the whole-pool quarantine path, where
+        `_fail_all` rebuilds the pool instead of touching per-slot
+        state that may itself be corrupt."""
+        sess.fault = exc
+        if sess in self._queue:
+            self._queue.remove(sess)
+        slot = sess.slot
+        sess.slot = None
+        if slot is not None:
+            self._owner[slot] = None
+            if release:
+                self._release_slot(slot)
+        if len(self._fault_log) < 4096:     # bounded forensic record
+            self._fault_log.append({
+                "sid": sess.sid, "slot": slot, "reason": exc.reason,
+                "deadline": isinstance(exc, DeadlineExceeded)})
+        if isinstance(exc, DeadlineExceeded):
+            self.metrics.on_deadline(sess)
+        else:
+            self.metrics.on_fault(sess)
+        self.metrics.sample_queue_depth(len(self._queue))
+
+    @worker_only
+    def _fail_all(self, cause: BaseException) -> None:
+        """Unattributable pump failure: fault every live session and
+        rebuild the pool from scratch.  Per-slot release is skipped —
+        the failure may have corrupted arbitrary pool state, so nothing
+        short of `_reset_pool` is safe to trust afterwards."""
+        for sess in list(self._queue) + [o for o in self._owner
+                                         if o is not None]:
+            self._fault_session(
+                sess, SessionFaulted(sess.sid,
+                                     f"pool quarantined: {cause}",
+                                     cause=cause),
+                release=False)
+        self._queue.clear()
+        self._owner = [None] * self.n_slots
+        self.n_steps = 0
+        self._reset_pool()
+
+    @worker_only
+    def _reap_deadlines(self) -> bool:
+        """Evict sessions older than `EngineConfig.session_deadline`
+        (open -> now, on the metrics clock so tests inject time).  Runs
+        every pump round; a stuck client or a session starved behind a
+        pathological queue frees its slot/queue entry instead of
+        holding it forever."""
+        deadline = self.session_deadline
+        if deadline is None:
+            return False
+        now = self.metrics._clock()
+        did = False
+        for sess in list(self._queue) + [o for o in self._owner
+                                         if o is not None]:
+            if (sess._t_open is not None
+                    and now - sess._t_open > deadline):
+                self._fault_session(sess, DeadlineExceeded(
+                    sess.sid,
+                    f"exceeded session_deadline={deadline}s"))
+                did = True
+        return did
 
     @worker_only
     def _admit(self) -> bool:
@@ -313,6 +443,11 @@ class Engine:
         raise NotImplementedError
 
     def _finalize_slot(self, slot: int) -> dict:
+        raise NotImplementedError
+
+    def _release_slot(self, slot: int) -> None:
+        """Scrub one slot after its session was evicted mid-flight
+        (fault/deadline) so the next admission sees a fresh slot."""
         raise NotImplementedError
 
     def _reset_pool(self) -> None:

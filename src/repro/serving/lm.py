@@ -38,8 +38,8 @@ import numpy as np
 from repro.models import LM
 from repro.analysis.guards import no_implicit_transfers
 from repro.serving.config import EngineConfig, LmProgram
-from repro.serving.engine import (Engine, Session, copy_result,
-                                 worker_only)
+from repro.serving.engine import (Engine, Session, SessionFaulted,
+                                 copy_result, worker_only)
 
 
 class LmEngine(Engine):
@@ -103,8 +103,13 @@ class LmEngine(Engine):
         if session._pending is not None or session.admitted or session.done:
             raise RuntimeError(
                 f"session {session.sid}: LM sessions take one prompt")
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        self.program.validate_prompt(prompt.shape[0])
+        # validate BEFORE the int32 cast (which would mask a
+        # float/garbage dtype and silently truncate) and BEFORE any
+        # reshape (which would mask a matrix pushed where a token
+        # vector belongs): out-of-vocab/garbage ids must never reach
+        # the co-batched prefill gather
+        self.program.validate_input(np.asarray(prompt))
+        prompt = np.asarray(prompt, np.int32)
         session._pending = prompt
         self._admit()          # prefill now if a slot is free
 
@@ -145,12 +150,69 @@ class LmEngine(Engine):
             b = self._bucket(int(sess._pending.shape[0]))
             groups.setdefault(b, []).append((sess, slot))
         for b, group in sorted(groups.items()):
-            self._prefill_group(b, group)
+            self._prefill_isolated(b, group)
         for sess in ready:
-            sess._pending = None
-            self.metrics.on_admit(sess)
+            if sess.fault is None:      # prefill isolation may have evicted
+                sess._pending = None
+                self.metrics.on_admit(sess)
         self.metrics.sample_queue_depth(len(self._queue))
         return True
+
+    def _prefill_isolated(self, bucket: int, group) -> None:
+        """Run one bucket's batched prefill with poison-prompt
+        isolation: on failure, bisection PROBES
+        (`_prefill_group(..., commit=False)`) pin the failure to its
+        (session, slot) rows, only those sessions are evicted
+        (`SessionFaulted`; their slots release for the next admit), and
+        the healthy rest re-prefills together in one committed call —
+        the same group composition a fault-free admit would run, so
+        survivors see identical prefill numerics.  Replays are safe
+        because probes write nothing and the committed prefill rewrites
+        its group's cache rows wholesale from the still-pending
+        prompts.  A failure no probe reproduces gets one committed
+        full-group retry, then propagates to the pool quarantine."""
+        try:
+            self._prefill_group(bucket, group)
+            return
+        except Exception as exc:
+            if len(group) == 1:
+                sess, _slot = group[0]
+                self._fault_session(sess, SessionFaulted(
+                    sess.sid, f"prefill failed: {exc}", cause=exc))
+                return
+            root = exc
+        mid = len(group) // 2              # the full group just failed:
+        bad = (self._probe_prefill_faults(bucket, group[:mid])
+               + self._probe_prefill_faults(bucket, group[mid:]))
+        if not bad:
+            try:
+                self._prefill_group(bucket, group)
+            except Exception:
+                raise root
+            return
+        for (sess, _slot), exc in bad:
+            self._fault_session(sess, SessionFaulted(
+                sess.sid, f"prefill failed: {exc}", cause=exc))
+        bad_sids = {sess.sid for (sess, _slot), _ in bad}
+        survivors = [(s, slot) for s, slot in group
+                     if s.sid not in bad_sids]
+        if survivors:
+            self._prefill_isolated(bucket, survivors)
+
+    def _probe_prefill_faults(self, bucket: int, group):
+        """Bisection probe: non-committing `_prefill_group` replays
+        that pin a batched-prefill failure to its rows.  Returns
+        [((sess, slot), exc)] for every row whose singleton replay
+        fails."""
+        try:
+            self._prefill_group(bucket, group, commit=False)
+            return []
+        except Exception as exc:
+            if len(group) == 1:
+                return [(group[0], exc)]
+            mid = len(group) // 2
+            return (self._probe_prefill_faults(bucket, group[:mid])
+                    + self._probe_prefill_faults(bucket, group[mid:]))
 
     def _admit_to_slot(self, session: Session, slot: int) -> None:
         # kept for the Engine slot-mechanics contract; the overridden
@@ -158,10 +220,13 @@ class LmEngine(Engine):
         self._prefill_group(self._bucket(int(session._pending.shape[0])),
                             [(session, slot)])
 
-    def _prefill_group(self, bucket: int, group) -> None:
+    def _prefill_group(self, bucket: int, group, commit: bool = True) -> None:
         # pad to the smallest covering batch sub-bucket: jit entries ∝
         # (length buckets) x (batch buckets), and a 1-request admission
         # runs a 1-row prefill instead of n_slots rows
+        if self._faults is not None:
+            self._faults.check("lm_prefill",
+                               sids=tuple(s.sid for s, _ in group))
         B = next(b for b in self._batch_buckets if b >= len(group))
         toks = np.zeros((B, bucket), np.int32)
         lens = np.ones((B,), np.int32)
@@ -172,6 +237,8 @@ class LmEngine(Engine):
             lens[i] = prompt.shape[0]
         logits, pc = self._jit_prefill(self.params, jnp.asarray(toks),
                                        jnp.asarray(lens))
+        if not commit:                # isolation probe: discard
+            return
         # scatter the whole group at once: rows 0..G-1 of the prefill
         # cache land in the group's pool slots with ONE batched
         # advanced-index write per cache leaf (rows are ring-aligned
@@ -229,6 +296,12 @@ class LmEngine(Engine):
         out = {"tokens": list(self._gen[slot]), "done": True}
         self._gen[slot] = None
         return out
+
+    def _release_slot(self, slot: int) -> None:
+        # evicted mid-generation: drop the generation bookkeeping; the
+        # cache rows are rewritten wholesale by the slot's next prefill
+        self._gen[slot] = None
+        self._rem[slot] = 0
 
     # ---- whole-batch convenience -------------------------------------
     def serve(self, prompts) -> List[list]:

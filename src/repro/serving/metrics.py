@@ -74,6 +74,9 @@ class EngineMetrics:
         self.admitted = 0
         self.rejected = 0
         self.finalized = 0
+        self.faulted_sessions = 0     # quarantined (poison input / pool)
+        self.deadline_evictions = 0   # reaped past session_deadline
+        self.worker_restarts = 0      # supervisor rebuilt the worker
         self.queue_depth = 0
         self.max_queue_depth = 0
         self.steps = 0
@@ -131,6 +134,22 @@ class EngineMetrics:
         if session._t_finish is not None:
             self.finalize.add(t - session._t_finish)
 
+    # ---- faults ------------------------------------------------------
+    def on_fault(self, session) -> None:
+        """Session evicted with a typed `SessionFaulted` (poison input,
+        failed prefill, or whole-pool quarantine)."""
+        self.faulted_sessions += 1
+
+    def on_deadline(self, session) -> None:
+        """Session reaped past `EngineConfig.session_deadline`."""
+        self.deadline_evictions += 1
+
+    def on_worker_restart(self) -> None:
+        """The supervisor detected a dead/wedged `EngineWorker` and
+        rebuilt it (called from the event loop: a dead worker cannot
+        record its own death)."""
+        self.worker_restarts += 1
+
     # ---- readout -----------------------------------------------------
     def occupancy(self) -> Optional[float]:
         """Fraction of dispatched sub-batch rows holding a real active
@@ -145,7 +164,10 @@ class EngineMetrics:
             "sessions": {
                 "opened": self.opened, "admitted": self.admitted,
                 "rejected": self.rejected, "finalized": self.finalized,
+                "faulted": self.faulted_sessions,
+                "deadline_evicted": self.deadline_evictions,
             },
+            "workers": {"restarts": self.worker_restarts},
             "queue": {
                 "depth": self.queue_depth,
                 "max_depth": self.max_queue_depth,

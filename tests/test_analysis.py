@@ -287,6 +287,52 @@ def test_rpl004_suppressed(tmp_path):
     assert codes(suppressed) == ["RPL004"]
 
 
+SUPERVISED = """
+    def worker_only(fn):
+        return fn
+
+    class Eng:
+        @worker_only
+        def _fail_all(self, exc):
+            pass
+
+    class Server:
+        def {name}(self, eng, worker, exc):
+            {call}
+"""
+
+
+def test_rpl004_fires_in_sync_watchdog_entry_point(tmp_path):
+    """Supervisor/watchdog restart paths are sync defs running on the
+    event-loop thread; a direct @worker_only call there is the same
+    cross-thread race as one in an async handler."""
+    findings, _ = lint_snippet(
+        tmp_path, SUPERVISED.format(name="_watchdog_restart",
+                                    call="eng._fail_all(exc)"))
+    assert codes(findings) == ["RPL004"]
+    assert "supervisor/watchdog" in findings[0].message
+
+
+def test_rpl004_clean_watchdog_through_worker_thunk(tmp_path):
+    """The blessed restart idiom — submitting the quarantine as a thunk
+    the NEW worker runs — stays clean (lambdas are exempt)."""
+    findings, _ = lint_snippet(
+        tmp_path, SUPERVISED.format(
+            name="_supervise_restart",
+            call="worker.submit(lambda e: e._fail_all(exc))"))
+    assert findings == []
+
+
+def test_rpl004_ignores_unrelated_sync_functions(tmp_path):
+    """Plain sync helpers (in-process drivers, tests) may call
+    @worker_only methods directly — only supervisor/watchdog-named
+    entry points are loop-side by contract."""
+    findings, _ = lint_snippet(
+        tmp_path, SUPERVISED.format(name="drive_inprocess",
+                                    call="eng._fail_all(exc)"))
+    assert findings == []
+
+
 # ---------------------------------------------------------------------------
 # RPL005 — RNG discipline (minimized PR 5 bug)
 # ---------------------------------------------------------------------------

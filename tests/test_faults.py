@@ -1,0 +1,610 @@
+"""Chaos suite for the fault-isolated serving stack (PR 9).
+
+Drives the deterministic fault-injection harness
+(`repro.serving.faults.FaultPolicy`) against the real engines and the
+real network front-end: per-session quarantine (poison input isolated
+by bisection, co-batched survivors bitwise identical), whole-pool
+quarantine on unattributable pump failures, session deadlines on an
+injected clock, worker supervision (dead + wedged threads detected via
+heartbeat and restarted, `/healthz` flipping 200 -> 503 -> 200),
+graceful drain under load, idle timeouts, and client-side retry.
+
+Every injection is counter-driven (`FaultSpec.nth/count/match`), never
+wall-clock-driven, so each scenario replays identically.
+"""
+import asyncio
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticASR
+from repro.models import LM
+from repro.serving import (AsrEngine, AsrProgram, DeadlineExceeded,
+                           EngineConfig, EngineMetrics, FaultPolicy,
+                           FaultSpec, InjectedFault, LmEngine, LmProgram,
+                           SessionFaulted, WorkerKilled)
+from repro.serving.server import (AsrClient, EngineServer, ServerRejected,
+                                  _read_chunk, fetch_healthz,
+                                  fetch_metrics)
+from test_serving import FEAT16, TINY_TDS, _asr_system, _same
+from test_serving_server import _as_result, _with_server
+
+
+def _asr_engine(n_slots, **cfg):
+    words, lex, lm, dcfg, params = _asr_system()
+    program = AsrProgram(TINY_TDS, lex, lm, FEAT16, dcfg)
+    engine = AsrEngine(EngineConfig(program, n_slots=n_slots, **cfg),
+                       params)
+    return engine, words
+
+
+def _lm_engine(n_slots, **cfg):
+    mcfg = get_config("mamba2-1.3b").tiny()
+    params = LM(mcfg).init(jax.random.PRNGKey(0))
+    program = LmProgram(mcfg, cache_len=16, max_new=4)
+    return LmEngine(EngineConfig(program, n_slots=n_slots, **cfg),
+                    params), program
+
+
+async def _poll_until(pred, timeout=10.0, interval=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        res = await pred()
+        if res:
+            return res
+        await asyncio.sleep(interval)
+    raise AssertionError(f"condition not reached within {timeout}s")
+
+
+# ---------------------------------------------------------------------------
+# the injection harness itself: deterministic, replayable
+# ---------------------------------------------------------------------------
+
+def test_fault_policy_counters_are_deterministic():
+    """nth/count/match arithmetic over per-site counters: two identical
+    policies driven by the same check sequence produce the same firings
+    and the same log — no wall clock, no RNG."""
+    def build():
+        return FaultPolicy([
+            FaultSpec("s", nth=1, count=2, message="mid"),
+            FaultSpec("t", match=lambda ctx: ctx.get("sid") == 7,
+                      count=None, message="sid7"),
+        ])
+
+    def drive(policy):
+        fired = []
+        for i in range(5):
+            try:
+                policy.check("s", i=i)
+                fired.append(False)
+            except InjectedFault:
+                fired.append(True)
+        for sid in (5, 7, 7, 6):
+            try:
+                policy.check("t", sid=sid)
+                fired.append(False)
+            except InjectedFault:
+                fired.append(True)
+        return fired
+
+    a, b = build(), build()
+    fired = drive(a)
+    # "s": skips the 0th matching check, fires the next two, disarms;
+    # "t": fires on every sid==7 forever (count=None), never on others
+    assert fired == [False, True, True, False, False,
+                     False, True, True, False]
+    assert drive(b) == fired
+    assert [e["site"] for e in a.log] == ["s", "s", "t", "t"]
+    assert a.log == b.log
+    with pytest.raises(ValueError, match="unknown fault action"):
+        FaultSpec("s", action="explode")
+
+
+def test_fault_spec_match_does_not_advance_nth():
+    """A non-matching check neither fires nor consumes the spec's nth
+    budget — matching is a filter over the invocation stream."""
+    policy = FaultPolicy([FaultSpec(
+        "s", nth=1, match=lambda ctx: ctx["hot"], message="x")])
+    policy.check("s", hot=False)       # ignored entirely
+    policy.check("s", hot=True)        # first MATCHING check: skipped (nth=1)
+    with pytest.raises(InjectedFault):
+        policy.check("s", hot=True)    # second matching check: fires
+    policy.check("s", hot=True)        # count=1 exhausted
+
+
+# ---------------------------------------------------------------------------
+# input validation: poison rejected at push, before anything is buffered
+# ---------------------------------------------------------------------------
+
+def test_asr_push_rejects_poison_before_buffering():
+    engine, words = _asr_engine(1)
+    audio = SyntheticASR(words).utterance(2)["audio"]
+    sess = engine.open()
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        sess.push(np.array([0.1, np.nan, 0.2], np.float32))
+    with pytest.raises(ValueError, match="1-D"):
+        sess.push(np.zeros((4, 4), np.float32))
+    with pytest.raises(ValueError, match="max_push_samples"):
+        sess.push(np.zeros((engine.program.max_push_samples + 1,),
+                           np.float32))
+    # nothing was buffered and the session is still healthy: a clean
+    # push decodes exactly like a fresh session
+    res = sess.push(audio).finish()
+    ref = _asr_engine(1)[0].open().push(audio).finish()
+    _same(res, ref, tol=0.0)
+    assert engine.metrics.faulted_sessions == 0
+
+
+def test_lm_push_rejects_poison_prompts():
+    engine, program = _lm_engine(1)
+    vocab = program.model_cfg.vocab_size
+    sess = engine.open()
+    with pytest.raises(ValueError, match="integer token ids"):
+        sess.push(np.array([1.5, 2.5]))
+    with pytest.raises(ValueError, match="1-D"):
+        sess.push(np.array([[1, 2]], np.int32))
+    with pytest.raises(ValueError, match=r"in \[0,"):
+        sess.push(np.array([1, vocab + 3], np.int32))
+    with pytest.raises(ValueError, match="cache_len"):
+        sess.push(np.arange(1, 40, dtype=np.int32))
+    out = sess.push(np.array([1, 2, 3], np.int32)).poll()
+    assert out["done"] and len(out["tokens"]) == program.max_new
+
+
+# ---------------------------------------------------------------------------
+# per-session quarantine: bisection pins the poison slot
+# ---------------------------------------------------------------------------
+
+def test_poison_session_in_full_pool_quarantined_survivors_bitwise():
+    """The tentpole acceptance scenario: 8 co-batched sessions, one
+    poisoned (every fused step containing its sid faults).  Bisection
+    retry pins the fault to that one session; the other 7 finish with
+    results BITWISE identical to a fault-free engine's."""
+    poison_sid = 3
+    policy = FaultPolicy([FaultSpec(
+        "asr_step", count=None,
+        match=lambda ctx: poison_sid in ctx.get("sids", ()),
+        message="poison slot")])
+    engine, words = _asr_engine(8, faults=policy)
+    data = SyntheticASR(words)
+    utts = [data.utterance(i % 4)["audio"] for i in range(8)]
+
+    sessions = [engine.open() for _ in utts]
+    for sess, audio in zip(sessions, utts):
+        sess.push(audio)
+    for sess in sessions:
+        sess.finish(wait=False)        # end-of-input without driving yet
+    with pytest.raises(SessionFaulted, match="decoding step failed"):
+        sessions[poison_sid].finish()
+
+    # fault-free reference: the SAME push-all/finish-all flow (serve()
+    # staggers admissions, which legally reorders step buckets — the
+    # bitwise claim is about identical schedules, fault vs no fault)
+    ref_engine, _ = _asr_engine(8)
+    ref_sessions = [ref_engine.open() for _ in utts]
+    for sess, audio in zip(ref_sessions, utts):
+        sess.push(audio)
+    for sess in ref_sessions:
+        sess.finish(wait=False)
+    refs = [sess.finish() for sess in ref_sessions]
+    for i, sess in enumerate(sessions):
+        if i == poison_sid:
+            assert sess.faulted
+            with pytest.raises(SessionFaulted):
+                sess.poll()
+            continue
+        res = sess.finish()
+        _same(res, refs[i], tol=0.0)   # bitwise: same trajectory
+        assert res["steps"] == refs[i]["steps"]
+
+    # bisection narrowed every firing batch down to the lone poison sid
+    assert len(policy.log) >= 2        # at least one split happened
+    assert all(poison_sid in e["ctx"]["sids"] for e in policy.log)
+    assert tuple(policy.log[-1]["ctx"]["sids"]) == (poison_sid,)
+    assert engine.metrics.faulted_sessions == 1
+    assert engine._fault_log[0]["sid"] == poison_sid
+    # the freed slot is reusable after quarantine (solo decode: the
+    # step-bucket schedule legally differs from the co-batched refs,
+    # so default tolerance, not bitwise)
+    late = engine.open().push(utts[0]).finish()
+    _same(late, refs[0])
+
+
+def test_slot_level_api_has_no_session_to_evict():
+    """The deprecated slot-level API (feed_slot/pump) has no session to
+    attribute a singleton fault to: the raise propagates."""
+    policy = FaultPolicy([FaultSpec("asr_step", message="boom")])
+    engine, words = _asr_engine(1, faults=policy)
+    engine.feed_slot(0, SyntheticASR(words).utterance(0)["audio"])
+    with pytest.raises(InjectedFault, match="boom"):
+        engine.pump()
+
+
+def test_worker_killed_escapes_session_quarantine():
+    """`WorkerKilled` is a BaseException by design: the per-session and
+    per-pump quarantine (`except Exception`) must NOT contain it — it
+    models thread death only the supervisor may handle."""
+    policy = FaultPolicy([FaultSpec("asr_step", action="die")])
+    engine, words = _asr_engine(1, faults=policy)
+    sess = engine.open().push(SyntheticASR(words).utterance(0)["audio"])
+    with pytest.raises(WorkerKilled):
+        sess.finish()
+
+
+def test_lm_prefill_poison_isolated_from_cobatched_prompt():
+    """Two prompts admitted in ONE bucketed prefill batch, one poisoned:
+    bisection evicts only it; the co-batched prompt generates exactly
+    the clean reference tokens."""
+    poison_sid = 2
+    policy = FaultPolicy([FaultSpec(
+        "lm_prefill", count=None,
+        match=lambda ctx: poison_sid in ctx.get("sids", ()))])
+    engine, program = _lm_engine(2, faults=policy)
+    p2, p3 = (np.array([1, 2, 3], np.int32),
+              np.array([4, 5, 6, 7], np.int32))
+
+    # occupy both slots so the next two prompts queue and are admitted
+    # together (one bucket group) when the blockers drain
+    blockers = [engine.open().push(np.array([9, 8], np.int32))
+                for _ in range(2)]
+    s2 = engine.open()
+    s3 = engine.open()
+    s2.push(p2)                        # queued: no free slot yet
+    s3.push(p3)
+    for b in blockers:
+        assert b.poll()["done"]        # drains -> batched admit of s2+s3
+
+    with pytest.raises(SessionFaulted, match="prefill failed"):
+        s2.poll()
+    out = s3.poll()
+    assert out["done"]
+    ref_engine, _ = _lm_engine(1)
+    assert out["tokens"] == ref_engine.serve([p3])[0]
+    assert engine.metrics.faulted_sessions == 1
+    # the bisected group: pair -> each singleton -> only sid 2 evicted
+    assert [sorted(e["ctx"]["sids"]) for e in policy.log] == [[2, 3], [2]]
+
+
+# ---------------------------------------------------------------------------
+# whole-pool quarantine: unattributable pump failure
+# ---------------------------------------------------------------------------
+
+def test_unattributable_pump_failure_quarantines_pool_and_recovers():
+    engine, words = _asr_engine(2)
+    audio = SyntheticASR(words).utterance(1)["audio"]
+    s_active = engine.open().push(audio)
+
+    orig = engine._harvest
+    state = {"armed": False}
+
+    def corrupt_harvest():
+        if state["armed"]:
+            state["armed"] = False
+            raise RuntimeError("synthetic pool corruption")
+        return orig()
+
+    engine._harvest = corrupt_harvest
+    state["armed"] = True
+    with pytest.raises(SessionFaulted, match="pool quarantined"):
+        s_active.poll()
+    assert s_active.faulted
+    assert s_active.fault.__cause__.args == ("synthetic pool corruption",)
+    assert engine.metrics.faulted_sessions == 1
+    assert engine.n_steps == 0         # pool rebuilt from scratch
+
+    # the rebuilt pool serves new sessions exactly like a fresh engine
+    res = engine.open().push(audio).finish()
+    ref = _asr_engine(1)[0].open().push(audio).finish()
+    _same(res, ref, tol=0.0)
+
+
+# ---------------------------------------------------------------------------
+# deadlines on the injected metrics clock
+# ---------------------------------------------------------------------------
+
+def test_session_deadline_reaps_active_and_queued():
+    engine, words = _asr_engine(1, session_deadline=10.0)
+    clk = [100.0]
+    engine.metrics = EngineMetrics(clock=lambda: clk[0])
+    audio = SyntheticASR(words).utterance(0)["audio"]
+
+    active = engine.open().push(audio[:2000])
+    queued = engine.open()             # 1 slot: waits in the queue
+    clk[0] += 11.0
+    with pytest.raises(DeadlineExceeded, match="session_deadline"):
+        active.poll()
+    with pytest.raises(DeadlineExceeded):
+        queued.poll()
+    assert engine.metrics.deadline_evictions == 2
+    snap = engine.metrics.snapshot()["sessions"]
+    assert snap["deadline_evicted"] == 2 and snap["faulted"] == 0
+
+    # slot + queue entry were reclaimed; a fresh session fits the
+    # deadline and decodes normally
+    res = engine.open().push(audio).finish()
+    ref = _asr_engine(1)[0].open().push(audio).finish()
+    _same(res, ref, tol=0.0)
+
+
+# ---------------------------------------------------------------------------
+# worker supervision over the wire: dead + wedged threads
+# ---------------------------------------------------------------------------
+
+async def _suspend_supervisor(server):
+    """Deterministic 503-window observation: park the supervisor so a
+    dead/wedged worker stays unrestarted exactly until the test resumes
+    supervision."""
+    server._supervisor.cancel()
+    try:
+        await server._supervisor
+    except asyncio.CancelledError:
+        pass
+
+
+def _resume_supervisor(server):
+    server._supervisor = asyncio.get_running_loop().create_task(
+        server._supervise())
+
+
+async def _healthz_ok(server):
+    status, payload = await fetch_healthz(server.host, server.port)
+    return (status, payload) if status == 200 else None
+
+
+def test_server_dead_worker_healthz_flips_and_restart_serves():
+    """Kill the engine worker mid-service: /healthz flips 200 -> 503
+    (dead, pre-restart) -> 200 (supervisor restarted it), the in-flight
+    session resolves with a typed error instead of hanging, and the
+    restarted worker completes new sessions."""
+    arm = {"on": False}
+    policy = FaultPolicy([FaultSpec(
+        "pump", action="die", count=1,
+        match=lambda ctx: arm["on"], message="killed by test")])
+    engine, words = _asr_engine(1, faults=policy)
+    audio = SyntheticASR(words).utterance(1)["audio"]
+
+    async def go(server):
+        status, payload = await fetch_healthz(server.host, server.port)
+        assert status == 200 and payload["ok"]
+
+        inflight = await AsrClient.open(server.host, server.port)
+        assert (await inflight.push(audio[:4000]))["ok"]
+
+        await _suspend_supervisor(server)
+        arm["on"] = True               # next pump iteration dies
+        await _poll_until(
+            lambda: asyncio.sleep(0, not server._asr_worker.is_alive()))
+        arm["on"] = False
+        status, payload = await fetch_healthz(server.host, server.port)
+        assert status == 503
+        assert not payload["engines"]["asr"]["alive"]
+
+        # the in-flight session must observe a typed failure, not hang
+        res = await inflight.push(audio[4000:8000])
+        assert "error" in res
+        await inflight.aclose()
+
+        _resume_supervisor(server)
+        status, payload = await _poll_until(
+            lambda: _healthz_ok(server), timeout=15.0)
+        assert payload["engines"]["asr"]["restarts"] == 1
+        assert server._asr_worker.name == "asr-worker-r1"
+
+        fresh = await AsrClient.open(server.host, server.port)
+        await fresh.push(audio)
+        final = await fresh.finish()
+        metrics = await fetch_metrics(server.host, server.port)
+        return final, metrics
+
+    final, metrics = asyncio.run(_with_server(
+        EngineServer(asr_engine=engine, watch_interval=0.05), go))
+    ref = _asr_engine(1)[0].open().push(audio).finish()
+    _same(_as_result(final), ref)     # wire pump schedule vs in-process
+    assert metrics["asr"]["workers"]["restarts"] == 1
+    assert metrics["asr"]["sessions"]["faulted"] >= 1   # the in-flight one
+
+
+def test_server_wedged_worker_watchdog_restart():
+    """A stalled (not dead) worker thread: heartbeat stops aging the
+    watchdog out, /healthz reports alive-but-unhealthy 503, the
+    supervisor restarts, and the released zombie thread is fenced off
+    the pool by the ownership reclaim."""
+    arm = {"on": False}
+    policy = FaultPolicy(
+        [FaultSpec("pump", action="stall", count=1,
+                   match=lambda ctx: arm["on"])],
+        stall_timeout=30.0)
+    engine, words = _asr_engine(1, faults=policy,
+                                worker_watchdog=0.4)
+    audio = SyntheticASR(words).utterance(2)["audio"]
+
+    async def go(server):
+        old = server._asr_worker
+        await _suspend_supervisor(server)
+        # warm every jit step bucket through the server first: the
+        # tight 0.4s watchdog must measure a wedged pump, not a
+        # first-use compile, once supervision resumes after the restart
+        warm = await AsrClient.open(server.host, server.port)
+        await warm.push(audio)
+        warm_res = await warm.finish()
+        assert not warm_res.get("error"), warm_res
+        arm["on"] = True               # next pump iteration blocks
+        await _poll_until(lambda: asyncio.sleep(
+            0, old.heartbeat_age() > 0.4))
+        arm["on"] = False
+        status, payload = await fetch_healthz(server.host, server.port)
+        eng_h = payload["engines"]["asr"]
+        assert status == 503           # wedged: alive but unhealthy
+        assert eng_h["alive"] and not eng_h["healthy"]
+
+        _resume_supervisor(server)
+        await _poll_until(lambda: asyncio.sleep(
+            0, server._asr_worker is not old))
+        policy.release()               # wake the zombie: worker_only fences it
+
+        status, payload = await _poll_until(
+            lambda: _healthz_ok(server), timeout=15.0)
+        assert payload["engines"]["asr"]["restarts"] >= 1
+
+        fresh = await AsrClient.open(server.host, server.port)
+        await fresh.push(audio)
+        return await fresh.finish()
+
+    final = asyncio.run(_with_server(
+        EngineServer(asr_engine=engine, watch_interval=0.1), go))
+    ref = _asr_engine(1)[0].open().push(audio).finish()
+    _same(_as_result(final), ref)     # wire pump schedule vs in-process
+    assert engine.metrics.worker_restarts >= 1
+
+
+def test_server_poison_session_errors_in_stream_others_unaffected():
+    """Over the wire: the poisoned session's command gets an in-stream
+    `faulted` error chunk, the co-batched session completes with the
+    clean reference transcript, the worker thread survives (quarantine,
+    not crash), and /healthz stays 200."""
+    poison_sid = 0
+    policy = FaultPolicy([FaultSpec(
+        "asr_step", count=None,
+        match=lambda ctx: poison_sid in ctx.get("sids", ()))])
+    engine, words = _asr_engine(2, faults=policy)
+    data = SyntheticASR(words)
+    bad_audio = data.utterance(0)["audio"]
+    good_audio = data.utterance(3)["audio"]
+
+    async def go(server):
+        bad = await AsrClient.open(server.host, server.port)
+        good = await AsrClient.open(server.host, server.port)
+        await bad.push(bad_audio)
+        await good.push(good_audio)
+        # drive until the quarantine lands: the bad session's poll (or
+        # finish) comes back as a faulted error chunk
+        res = await bad.finish()
+        assert res.get("faulted") and "faulted" in res["error"]
+        final = await good.finish()
+        status, _ = await fetch_healthz(server.host, server.port)
+        assert status == 200           # worker survived the poison
+        assert server._asr_worker.is_alive()
+        metrics = await fetch_metrics(server.host, server.port)
+        return final, metrics
+
+    final, metrics = asyncio.run(_with_server(
+        EngineServer(asr_engine=engine), go))
+    ref = _asr_engine(1)[0].open().push(good_audio).finish()
+    _same(_as_result(final), ref)     # co-batched wire vs solo in-process
+    assert metrics["asr"]["sessions"]["faulted"] == 1
+    assert metrics["asr"]["workers"]["restarts"] == 0
+
+
+# ---------------------------------------------------------------------------
+# graceful drain, idle timeout, client retry
+# ---------------------------------------------------------------------------
+
+def test_server_drain_under_load_returns_every_result():
+    """aclose(drain=True) while sessions are mid-stream: every active
+    session still gets its final transcript (no result loss), and the
+    listener refuses new connections."""
+    engine, words = _asr_engine(2)
+    data = SyntheticASR(words)
+    utts = [data.utterance(i)["audio"] for i in range(4)]
+
+    async def stream(server, audio, started: asyncio.Event):
+        client = await AsrClient.open(server.host, server.port)
+        chunks = [audio[off:off + 4000]
+                  for off in range(0, len(audio), 4000)]
+        await client.push(chunks[0])
+        started.set()
+        for chunk in chunks[1:]:
+            await client.push(chunk)
+            await asyncio.sleep(0.01)  # keep the stream mid-flight
+        return await client.finish()
+
+    async def go(server):
+        started = [asyncio.Event() for _ in utts]
+        tasks = [asyncio.create_task(stream(server, a, ev))
+                 for a, ev in zip(utts, started)]
+        for ev in started:
+            await ev.wait()            # every session is open + pushing
+        await server.aclose(drain=True, timeout=60.0)
+        finals = await asyncio.gather(*tasks)
+        with pytest.raises((ConnectionError, OSError)):
+            await AsrClient.open(server.host, server.port)
+        return finals
+
+    async def run():
+        server = EngineServer(asr_engine=engine)
+        await server.start()
+        try:
+            return await go(server)
+        finally:
+            await server.aclose()      # idempotent cleanup
+    finals = asyncio.run(run())
+
+    ref_engine, _ = _asr_engine(1)
+    for audio, final in zip(utts, finals):
+        ref = ref_engine.open().push(audio).finish()
+        # default tolerance: concurrent co-batched streams legally run
+        # a different step-bucket schedule than the solo reference —
+        # the drain claim is "no result lost", not bitwise parity
+        _same(_as_result(final), ref)
+    assert engine.metrics.finalized == len(utts)
+
+
+def test_server_idle_timeout_frees_slot():
+    """A silent client gets an in-stream idle-timeout error and its slot
+    back in the pool; the next session decodes normally."""
+    engine, words = _asr_engine(1)
+    audio = SyntheticASR(words).utterance(1)["audio"]
+
+    async def go(server):
+        quiet = await AsrClient.open(server.host, server.port)
+        await quiet.push(audio[:4000])
+        await asyncio.sleep(0.8)       # exceed the 0.25 s idle timeout
+        # the server already wrote the in-stream timeout error and
+        # terminated the response: read it without sending anything
+        res = json.loads(await _read_chunk(quiet._reader))
+        assert "idle timeout" in res.get("error", "")
+        await quiet.aclose()
+
+        fresh = await AsrClient.open(server.host, server.port)
+        await fresh.push(audio)
+        return await fresh.finish()
+
+    final = asyncio.run(_with_server(
+        EngineServer(asr_engine=engine, asr_idle_timeout=0.25), go))
+    ref = _asr_engine(1)[0].open().push(audio).finish()
+    _same(_as_result(final), ref)     # wire pump schedule vs in-process
+
+
+def test_client_retry_rides_out_backpressure():
+    """With retries armed, a 503 backpressure rejection is retried with
+    jittered backoff until the busy slot frees — the caller sees a
+    session, not a ServerRejected."""
+    engine, words = _asr_engine(1, max_queue=0)
+    audio = SyntheticASR(words).utterance(0)["audio"]
+
+    async def go(server):
+        first = await AsrClient.open(server.host, server.port)
+        await first.push(audio)
+        with pytest.raises(ServerRejected):
+            await AsrClient.open(server.host, server.port)   # no retries
+
+        retry_task = asyncio.create_task(AsrClient.open(
+            server.host, server.port, retries=40, backoff=0.02, seed=7))
+        await asyncio.sleep(0.1)
+        assert not retry_task.done()   # still backing off against 503
+        r1 = await first.finish()      # frees the slot
+        second = await retry_task
+        await second.push(audio)
+        r2 = await second.finish()
+        metrics = await fetch_metrics(server.host, server.port)
+        return r1, r2, metrics
+
+    r1, r2, metrics = asyncio.run(_with_server(
+        EngineServer(asr_engine=engine), go))
+    _same(_as_result(r1), _as_result(r2))
+    assert metrics["asr"]["sessions"]["rejected"] >= 2
+    assert metrics["asr"]["sessions"]["finalized"] == 2

@@ -1,8 +1,10 @@
 """Network serving front-end (repro.serving.server): wire-protocol
 parity against in-process decoding, concurrent streaming sessions over
 one engine-worker thread, typed 503 backpressure with a bounded queue,
-the /metrics endpoint, and one-shot LM generation over the wire."""
+the /metrics endpoint, one-shot LM generation over the wire, and the
+malformed-input / abrupt-disconnect containment paths."""
 import asyncio
+import json
 
 import jax
 import numpy as np
@@ -72,7 +74,9 @@ def test_server_asr_stream_matches_inprocess_and_metrics():
 
     m = metrics["asr"]
     assert m["sessions"] == {"opened": 1, "admitted": 1, "rejected": 0,
-                             "finalized": 1}
+                             "finalized": 1, "faulted": 0,
+                             "deadline_evicted": 0}
+    assert m["workers"] == {"restarts": 0}
     assert m["latency"]["first_result"]["count"] == 1
     assert m["latency"]["finalize"]["count"] == 1
     assert m["steps"]["occupancy"] > 0
@@ -179,3 +183,206 @@ def test_server_unknown_route_and_missing_engine():
         return True
 
     assert asyncio.run(_with_server(EngineServer(asr_engine=engine), go))
+
+
+# ---------------------------------------------------------------------------
+# malformed input: bad commands, garbage framing
+# ---------------------------------------------------------------------------
+
+async def _session_counts(host, port, role="asr"):
+    m = (await fetch_metrics(host, port))[role]["sessions"]
+    return m
+
+
+async def _await_reclaimed(server, opened, timeout=10.0):
+    """Poll /metrics until every opened session left the engine (slot
+    and queue reclaimed: finalized or faulted)."""
+    loop = asyncio.get_running_loop()
+    deadline = loop.time() + timeout
+    while True:
+        m = await _session_counts(server.host, server.port)
+        if m["finalized"] + m["faulted"] + m["deadline_evicted"] >= opened:
+            return m
+        assert loop.time() < deadline, m
+        await asyncio.sleep(0.02)
+
+
+def test_server_malformed_command_chunks_keep_session_alive():
+    """Bad JSON / missing audio / non-numeric audio / NaN samples each
+    get an in-stream {"error": ...} reply and the session survives: the
+    same connection then streams a clean utterance to the exact
+    in-process transcript."""
+    from repro.serving.server import _read_chunk, _write_chunk
+
+    engine, words = _asr_engine(1)
+    audio = SyntheticASR(words).utterance(2)["audio"]
+
+    async def bad_cmd(client, raw: bytes) -> dict:
+        await _write_chunk(client._writer, raw)
+        return json.loads(await _read_chunk(client._reader))
+
+    async def go(server):
+        client = await AsrClient.open(server.host, server.port)
+        for raw in (b"{not json",
+                    b"[1, 2, 3]",
+                    b'{"op": "push"}',
+                    b'{"op": "push", "audio": "zebra"}',
+                    b'{"op": "push", "audio": [[0.1], [0.2]]}',
+                    b'{"op": "push", "audio": [0.1, NaN, 0.2]}',
+                    b'{"op": "frobnicate"}'):
+            res = await bad_cmd(client, raw)
+            assert "error" in res, (raw, res)
+        for off in range(0, len(audio), 4000):
+            assert (await client.push(audio[off:off + 4000]))["ok"]
+        final = await client.finish()
+        m = await _session_counts(server.host, server.port)
+        return final, m
+
+    final, m = asyncio.run(_with_server(EngineServer(asr_engine=engine), go))
+    ref = _asr_engine(1)[0].open().push(audio).finish()
+    _same(_as_result(final), ref)
+    assert m["opened"] == m["finalized"] == 1 and m["faulted"] == 0
+
+
+def test_server_garbage_chunk_framing_ends_stream_with_error():
+    """Garbage bytes where a chunk-size line belongs: the server answers
+    with a final in-stream error (the byte stream is unrecoverable) and
+    reclaims the session instead of leaking an exception."""
+    from repro.serving.server import _read_chunk
+
+    engine, _ = _asr_engine(1)
+
+    async def go(server):
+        client = await AsrClient.open(server.host, server.port)
+        client._writer.write(b"THIS IS NOT HEX\r\n")
+        await client._writer.drain()
+        err = json.loads(await _read_chunk(client._reader))
+        assert "malformed chunk-size" in err["error"] and err["final"]
+        assert await _read_chunk(client._reader) is None  # clean terminator
+        await client.aclose()
+        return await _await_reclaimed(server, opened=1)
+
+    m = asyncio.run(_with_server(EngineServer(asr_engine=engine), go))
+    assert m["finalized"] == 1
+
+
+def test_server_bad_content_length_responds_400():
+    """A garbage Content-Length on /lm is a ProtocolError the server
+    turns into a 400 response, not an unretrieved task exception."""
+    cfg = get_config("mamba2-1.3b").tiny()
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    engine = LmEngine(EngineConfig(LmProgram(cfg, cache_len=16, max_new=4),
+                                   n_slots=1), params)
+
+    async def go(server):
+        reader, writer = await asyncio.open_connection(server.host,
+                                                       server.port)
+        writer.write((f"POST /lm HTTP/1.1\r\nHost: {server.host}\r\n"
+                      "Content-Length: banana\r\n\r\n").encode())
+        await writer.drain()
+        head = await reader.readuntil(b"\r\n\r\n")
+        writer.close()
+        return head.decode("latin-1").split("\r\n")[0]
+
+    status_line = asyncio.run(_with_server(EngineServer(lm_engine=engine),
+                                           go))
+    assert " 400 " in status_line
+
+
+def test_parse_status_rejects_garbage():
+    from repro.serving.server import ProtocolError, _parse_status
+
+    assert _parse_status("HTTP/1.1 200 OK") == 200
+    with pytest.raises(ProtocolError, match="malformed status line"):
+        _parse_status("complete garbage")
+
+
+# ---------------------------------------------------------------------------
+# abrupt client disconnects: slot + queue reclaimed, metrics consistent
+# ---------------------------------------------------------------------------
+
+def test_server_disconnect_mid_push_reclaims_slot():
+    """TCP reset in the middle of an admitted stream: the engine frees
+    the slot (the session is finished server-side) and the next client
+    gets it."""
+    engine, words = _asr_engine(1)
+    audio = SyntheticASR(words).utterance(1)["audio"]
+
+    async def go(server):
+        rude = await AsrClient.open(server.host, server.port)
+        await rude.push(audio[:8000])
+        rude._writer.transport.abort()         # RST, no clean last-chunk
+        await _await_reclaimed(server, opened=1)
+
+        fresh = await AsrClient.open(server.host, server.port)
+        await fresh.push(audio)
+        final = await fresh.finish()
+        m = await _session_counts(server.host, server.port)
+        return final, m
+
+    final, m = asyncio.run(_with_server(EngineServer(asr_engine=engine), go))
+    ref = _asr_engine(1)[0].open().push(audio).finish()
+    _same(_as_result(final), ref)
+    assert m["opened"] == m["finalized"] == 2
+    assert m["faulted"] == 0
+
+
+def test_server_disconnect_while_queued_reclaims_queue_entry():
+    """A client that vanishes while still WAITING for a slot must not
+    wedge the pool: its finished-empty session closes as soon as a slot
+    frees, so the active stream and later arrivals are unaffected."""
+    engine, words = _asr_engine(1)
+    audio = SyntheticASR(words).utterance(0)["audio"]
+
+    async def go(server):
+        active = await AsrClient.open(server.host, server.port)
+        await active.push(audio[:8000])
+        queued = await AsrClient.open(server.host, server.port)
+        queued._writer.transport.abort()       # dies in the queue
+        await active.push(audio[8000:])
+        r_active = await active.finish()
+        # active's slot freed -> the dead queued session is admitted
+        # empty and harvested with an empty result
+        await _await_reclaimed(server, opened=2)
+
+        late = await AsrClient.open(server.host, server.port)
+        await late.push(audio)
+        r_late = await late.finish()
+        m = await _session_counts(server.host, server.port)
+        return r_active, r_late, m
+
+    r_active, r_late, m = asyncio.run(
+        _with_server(EngineServer(asr_engine=engine), go))
+    _same(_as_result(r_active), _as_result(r_late))
+    assert m["opened"] == m["finalized"] == 3  # queued one closed empty
+    assert m["faulted"] == 0
+
+
+def test_server_disconnect_between_finish_and_final_chunk():
+    """The client sends `finish` but drops before reading the result:
+    the engine still finalizes the session (the result exists, the
+    write just fails) and the pool stays clean for the next stream."""
+    from repro.serving.server import _write_chunk
+
+    engine, words = _asr_engine(1)
+    audio = SyntheticASR(words).utterance(3)["audio"]
+
+    async def go(server):
+        rude = await AsrClient.open(server.host, server.port)
+        await rude.push(audio)
+        await _write_chunk(rude._writer,
+                           json.dumps({"op": "finish"}).encode())
+        rude._writer.transport.abort()         # never reads the result
+        await _await_reclaimed(server, opened=1)
+
+        fresh = await AsrClient.open(server.host, server.port)
+        await fresh.push(audio)
+        final = await fresh.finish()
+        m = await _session_counts(server.host, server.port)
+        return final, m
+
+    final, m = asyncio.run(_with_server(EngineServer(asr_engine=engine), go))
+    ref = _asr_engine(1)[0].open().push(audio).finish()
+    _same(_as_result(final), ref)
+    assert m["opened"] == m["finalized"] == 2
+    assert m["faulted"] == 0

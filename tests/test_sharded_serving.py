@@ -289,8 +289,9 @@ def test_assemble_batch_is_shard_aligned():
     """With a 2-wide data axis over 4 slots (2 slots/shard), eligible
     slots {0,1,3} must assemble into per-shard row blocks: shard 0's
     slots at rows [0, bloc), shard 1's at [bloc, 2*bloc), pad rows
-    zero-filled with index -1 (dropped on scatter-back), and the
-    consumed samples retired from the slot buffers."""
+    zero-filled with index -1 (dropped on scatter-back).  Assembly is
+    non-destructive (a faulted step must be replayable on the surviving
+    halves); `_retire` is what consumes the buffered samples."""
     mesh = jax.make_mesh((2, 1), ("data", "model"))
     engine, _ = asr_demo_engine(4, mesh=mesh)
     assert engine._slots_per_shard == 2
@@ -305,7 +306,10 @@ def test_assemble_batch_is_shard_aligned():
     np.testing.assert_array_equal(batch[1], 2.0)
     np.testing.assert_array_equal(batch[2], 4.0)      # slot 3 -> row bloc+0
     np.testing.assert_array_equal(batch[3], 0.0)      # pad row: zeros
-    for s in (0, 1, 3):                               # windows retired
+    for s in (0, 1, 3):                               # NOT yet consumed
+        assert engine.slot_windows(s) == 1
+    engine._retire([0, 1, 3], 1)                      # commit consumes
+    for s in (0, 1, 3):
         assert engine.slot_windows(s) == 0
 
 
