@@ -1,7 +1,7 @@
 """repro-lint: repo-specific static analysis for the JAX/Pallas serving
 stack (`python -m repro.analysis src/`).
 
-Five AST rules encode the contracts the serving engines, kernels, and
+Eight AST rules encode the contracts the serving engines, kernels, and
 launchers rely on — each one a bug class that previously had to be
 found by hand (see README "Static analysis" for the rule table and
 docs/examples):
@@ -26,10 +26,31 @@ docs/examples):
           engines' ('data','model') mesh step) and create PRNG keys
           must call `mesh_invariant_rng()` (the PR 5 elastic
           mesh-dependent-init class).
+  RPL006  collective/axis discipline (interprocedural): collectives
+          inside shard_map-reachable functions must name an axis the
+          binder's PartitionSpecs declare; a local partial matmul over
+          a sharded contraction dim needs a dominating psum (the PR 8
+          silent-wrong-numerics class); `mesh.shape[...]` on a mesh
+          parameter needs an `axis_names` guard.
+  RPL007  Pallas block contract: KERNEL_REGISTRY 'entry' metadata
+          names a real function whose signature covers a registered
+          ref twin, index_map outputs stay bounded/pure, and the
+          divisibility shape-guard sits next to the pallas_call.
+  RPL008  commit discipline: engine slot/pool state mutated before a
+          may-raise call without a commit=False probe or a restoring
+          try/finally (the PR 9 corrupt-slot-on-fault class).
+
+RPL001/003/004/005 are per-file; RPL002/006/007/008 run over the
+project-wide symbol table and call graph (repro.analysis.callgraph /
+repro.analysis.interproc), with facts propagated through bounded
+two-level call summaries — anything the engine can't resolve is
+treated as unknown, and unknown is never flagged.
 
 Suppress a finding with a trailing or preceding-line comment
 `# repro-lint: disable=RPL001` (comma-separate several codes), or a
-whole file with `# repro-lint: disable-file=RPL001`.
+whole file with `# repro-lint: disable-file=RPL001`.  Interprocedural
+findings carry related locations (e.g. the callee hazard line), and a
+disable comment at any of them also suppresses the finding.
 
 The runtime counterpart lives in `repro.analysis.guards`: compilation
 budgets (counting real XLA compiles via jax.monitoring) and transfer

@@ -28,6 +28,17 @@ RULE_DOCS = {
               "point) outside a worker thunk",
     "RPL005": "RNG discipline: sharded compute (out_shardings jit or "
               "shard_map) + PRNGKey without mesh_invariant_rng()",
+    "RPL006": "collective/axis discipline: collective axis names inside "
+              "shard_map-reachable code must be declared by the binder's "
+              "PartitionSpecs; partial matmuls over a shard-local slice "
+              "need a dominating psum; mesh.shape[...] needs an "
+              "axis_names guard",
+    "RPL007": "Pallas block contract: registry 'entry' metadata, "
+              "entry<->ref-twin signature parity, bounded index_map "
+              "outputs, and shape-guard placement for each pallas_call",
+    "RPL008": "commit discipline: engine slot/pool state mutated before "
+              "a may-raise call without commit=False probing or a "
+              "restoring finally",
 }
 
 
@@ -38,6 +49,8 @@ class Finding:
     col: int
     code: str
     message: str
+    related: tuple = ()           # ((path, line), ...) secondary sites —
+                                  # a suppression at any of them counts
 
     def format(self) -> str:
         return f"{self.path}:{self.line}:{self.col}: {self.code} " \
@@ -62,7 +75,9 @@ class Suppressions:
 
     A `# repro-lint: disable=RPL001[,RPL002]` comment suppresses those
     codes on its own line; on a comment-only line it also suppresses the
-    next line (so a suppression can sit above a long statement).
+    next statement line (so a suppression can sit above a long
+    statement) — and keeps sliding past decorator / blank / comment
+    lines so a comment above `@decorator`s covers the `def` line too.
     `# repro-lint: disable-file=RPL001` suppresses a code everywhere in
     the file.  Suppressed findings are counted, never silently lost.
     """
@@ -77,7 +92,11 @@ class Suppressions:
                 codes = self._codes(text, SUPPRESS_TAG)
                 self.by_line.setdefault(i, set()).update(codes)
                 if text.lstrip().startswith("#"):    # comment-only line
-                    self.by_line.setdefault(i + 1, set()).update(codes)
+                    for j in range(i + 1, min(i + 12, len(lines) + 1)):
+                        self.by_line.setdefault(j, set()).update(codes)
+                        nxt = lines[j - 1].lstrip()
+                        if nxt and not nxt.startswith(("#", "@")):
+                            break
 
     @staticmethod
     def _codes(text: str, tag: str) -> Set[str]:
@@ -122,6 +141,15 @@ class Context:
     root: pathlib.Path
     modules: Dict[str, ParsedModule]
     worker_only_names: Set[str] = field(default_factory=set)
+    _project = None
+
+    def project(self):
+        """Memoized whole-project symbol table + call graph shared by
+        the interprocedural rules (RPL006–008)."""
+        if self._project is None:
+            from repro.analysis.callgraph import ProjectIndex
+            self._project = ProjectIndex(self.modules, self.root)
+        return self._project
 
 
 def _collect_worker_only(modules: Dict[str, ParsedModule]) -> Set[str]:
@@ -178,14 +206,27 @@ def run_paths(paths: Sequence[str], *,
     findings: List[Finding] = []
     suppressed: List[Finding] = []
     supp_cache: Dict[str, Suppressions] = {}
+
+    def supp_for(rel: str) -> Optional[Suppressions]:
+        if rel not in supp_cache:
+            mod = next((m for m in modules.values() if m.rel == rel),
+                       None)
+            supp_cache[rel] = Suppressions(mod.lines) \
+                if mod is not None else None
+        return supp_cache[rel]
+
     for f in raw:
-        mod = next((m for m in modules.values() if m.rel == f.path), None)
-        if mod is not None:
-            if mod.rel not in supp_cache:
-                supp_cache[mod.rel] = Suppressions(mod.lines)
-            if supp_cache[mod.rel].covers(f):
-                suppressed.append(f)
-                continue
-        findings.append(f)
+        supp = supp_for(f.path)
+        covered = supp is not None and supp.covers(f)
+        # an interprocedural finding may also be suppressed at any of
+        # its related sites (e.g. the callee line of a may-raise chain)
+        for rpath, rline in f.related:
+            if covered:
+                break
+            rsupp = supp_for(rpath)
+            covered = rsupp is not None and \
+                f.code in (rsupp.file_wide
+                           | rsupp.by_line.get(rline, set()))
+        (suppressed if covered else findings).append(f)
     findings.sort(key=lambda f: (f.path, f.line, f.code))
     return findings, suppressed

@@ -93,21 +93,32 @@ def compilation_budget(budget: int, what: str = "block") -> \
 
 
 @contextlib.contextmanager
-def no_implicit_transfers() -> Iterator[None]:
+def no_implicit_transfers(strict: bool = False) -> Iterator[None]:
     """Disallow implicit host<->device transfers in the block.
 
     Wraps the serving engines' jitted step calls: arguments must
-    already be device arrays (explicit jnp.asarray conversion is fine
-    and still allowed by the guard), and nothing inside may trigger a
-    per-step scalar readback.
+    already be device arrays (explicit jnp.asarray / jax.device_put
+    conversion is fine and still allowed by the guard), and nothing
+    inside may trigger a per-step scalar readback.
 
-    Only the host<->device directions are guarded: device-to-device
-    transfers stay allowed because mesh-sharded serving legitimately
-    reshards the step's committed inputs across the mesh on dispatch
-    (a blanket transfer_guard("disallow") breaks `--mesh N`).
-    """
+    Default mode guards only the host<->device directions:
+    device-to-device transfers stay allowed because a cold mesh-sharded
+    step legitimately reshards committed inputs across the mesh on
+    dispatch.
+
+    `strict=True` adds the device-to-device direction (a blanket
+    jax.transfer_guard("disallow")), which also fails on
+    reshard-on-dispatch — on CPU host devices that reshard bounces
+    through the host, so a warmed sharded step that still hits it is
+    paying a hidden per-step round-trip.  Use it on WARMED paths whose
+    inputs are already placed with the step's in_specs shardings (the
+    engines upload batch/idx via explicit jax.device_put)."""
     import jax
 
+    if strict:
+        with jax.transfer_guard("disallow"):
+            yield
+        return
     with jax.transfer_guard_host_to_device("disallow"), \
             jax.transfer_guard_device_to_host("disallow"):
         yield

@@ -1,0 +1,440 @@
+"""Bounded interprocedural summaries over a `ProjectIndex`.
+
+Each summary answers one question about a function with at most TWO
+levels of callee inlining (`depth=2`): may it raise on the hot path,
+which collectives does it issue and over which axis names, which
+PartitionSpec axis literals does it (or its callees) declare, does it
+contain a psum / a matmul, is it the shard-local column slicer pattern.
+The two-level bound keeps the analysis linear and the answers local
+enough to explain in a finding message; anything the bound or the
+resolver cannot see resolves to "unknown", and every client rule treats
+unknown as "do not flag" — the engine adds reach, never guesses.
+
+`axis_values` is the workhorse: it resolves an axis-name expression to
+the set of string constants it can take (through locals, IfExp arms,
+`self.X` assignments anywhere in the class, module constants, and —
+one level deep — the arguments callers pass for a parameter), returning
+`(values, complete)`.  `complete=False` means some path was opaque and
+the caller must not flag.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import (FunctionInfo, ProjectIndex,
+                                      is_abstract)
+
+COLLECTIVE_TAILS = {
+    "psum", "psum_scatter", "pmean", "pmax", "pmin", "ppermute",
+    "all_gather", "all_to_all", "axis_index",
+}
+PSUM_TAILS = {"psum", "psum_scatter"}
+MATMUL_TAILS = {"dot", "matmul", "einsum", "tensordot", "dot_general"}
+
+SUMMARY_DEPTH = 2
+
+
+def _tail(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.value if not isinstance(node, ast.Call) else node.func
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _receiver_mentions(node: ast.AST, needle: str) -> bool:
+    """True if any attribute segment (or the root name) on the
+    receiver chain contains `needle` — e.g. `self._faults.check`."""
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        if needle in cur.attr:
+            return True
+        cur = cur.value
+    return isinstance(cur, ast.Name) and needle in cur.id
+
+
+@dataclass(eq=False)
+class Collective:
+    kind: str
+    call: ast.Call
+    axis: Optional[ast.expr]      # the axis-name expression, if present
+
+
+@dataclass(eq=False)
+class MayRaise:
+    reason: str
+    line: int                     # line of the hazard (in `where` file)
+    where: str                    # rel path of the hazard site
+
+
+class Summaries:
+    def __init__(self, index: ProjectIndex):
+        self.index = index
+        self._may_raise: Dict[FunctionInfo, Dict[int, object]] = {}
+        self._collectives: Dict[FunctionInfo, List[Collective]] = {}
+        self._p_literals: Dict[Tuple[int, int], Set[str]] = {}
+        self._flags: Dict[Tuple[str, int, int], bool] = {}
+        self._in_progress: Set[Tuple[str, int]] = set()
+
+    # ---- collectives / spec literals ---------------------------------
+    def collectives(self, fi: FunctionInfo) -> List[Collective]:
+        if fi not in self._collectives:
+            out = []
+            for call in self.index.calls_of(fi):
+                kind = _tail(call.func)
+                if kind not in COLLECTIVE_TAILS:
+                    continue
+                axis = None
+                for kw in call.keywords:
+                    if kw.arg in ("axis_name", "axis"):
+                        axis = kw.value
+                pos = 0 if kind == "axis_index" else 1
+                if axis is None and len(call.args) > pos:
+                    axis = call.args[pos]
+                out.append(Collective(kind, call, axis))
+            self._collectives[fi] = out
+        return self._collectives[fi]
+
+    def p_literals(self, fi: FunctionInfo,
+                   depth: int = SUMMARY_DEPTH) -> Set[str]:
+        """String constants appearing in P()/PartitionSpec() calls in
+        `fi` or (up to `depth`) its project callees — the axis names a
+        shard_map binder declares."""
+        key = (id(fi), depth)
+        if key in self._p_literals:
+            return self._p_literals[key]
+        tag = ("p", id(fi))
+        if tag in self._in_progress:
+            return set()
+        self._in_progress.add(tag)
+        try:
+            out: Set[str] = set()
+            for call in self.index.calls_of(fi):
+                if _tail(call.func) in ("P", "PartitionSpec"):
+                    for a in call.args:
+                        out |= _const_strs(a)
+            if depth > 0:
+                for _, callee in self.index.callees(fi):
+                    if callee is not fi:
+                        out |= self.p_literals(callee, depth - 1)
+            self._p_literals[key] = out
+            return out
+        finally:
+            self._in_progress.discard(tag)
+
+    def _has(self, what: str, fi: FunctionInfo, depth: int) -> bool:
+        key = (what, id(fi), depth)
+        if key in self._flags:
+            return self._flags[key]
+        tag = (what, id(fi))
+        if tag in self._in_progress:
+            return False
+        self._in_progress.add(tag)
+        try:
+            hit = False
+            if what == "psum":
+                hit = any(c.kind in PSUM_TAILS
+                          for c in self.collectives(fi))
+            elif what == "matmul":
+                hit = any(
+                    (isinstance(n, ast.BinOp)
+                     and isinstance(n.op, ast.MatMult))
+                    or (isinstance(n, ast.Call)
+                        and _tail(n.func) in MATMUL_TAILS)
+                    for n in self.index.owned(fi))
+            if not hit and depth > 0:
+                hit = any(self._has(what, callee, depth - 1)
+                          for _, callee in self.index.callees(fi)
+                          if callee is not fi)
+            self._flags[key] = hit
+            return hit
+        finally:
+            self._in_progress.discard(tag)
+
+    def contains_psum(self, fi, depth: int = SUMMARY_DEPTH) -> bool:
+        return self._has("psum", fi, depth)
+
+    def contains_matmul(self, fi, depth: int = SUMMARY_DEPTH) -> bool:
+        return self._has("matmul", fi, depth)
+
+    def is_shard_local_slicer(self, fi: FunctionInfo) -> bool:
+        """Body pairs axis_index with a dynamic_slice and returns the
+        result: the `shard_local_cols` pattern, recognized by shape so
+        renames and copies still count as taint sources."""
+        has_idx = any(c.kind == "axis_index" for c in self.collectives(fi))
+        has_slice = any(
+            isinstance(n, ast.Call) and (_tail(n.func) or "")
+            .startswith("dynamic_slice")
+            for n in self.index.owned(fi))
+        has_ret = any(isinstance(n, ast.Return) and n.value is not None
+                      for n in self.index.owned(fi))
+        return has_idx and has_slice and has_ret
+
+    # ---- may-raise ---------------------------------------------------
+    def may_raise(self, fi: FunctionInfo,
+                  depth: int = SUMMARY_DEPTH) -> Optional[MayRaise]:
+        cache = self._may_raise.setdefault(fi, {})
+        if depth in cache:
+            return cache[depth]            # type: ignore[return-value]
+        tag = ("raise", id(fi))
+        if tag in self._in_progress:
+            return None
+        self._in_progress.add(tag)
+        try:
+            result = self._may_raise_uncached(fi, depth)
+            cache[depth] = result
+            return result
+        finally:
+            self._in_progress.discard(tag)
+
+    def _may_raise_uncached(self, fi, depth) -> Optional[MayRaise]:
+        if is_abstract(fi.node):
+            return None
+        esc = _escaping_raise(fi.node.body)
+        if esc is not None:
+            return MayRaise(f"raises at {fi.mod.rel}:{esc.lineno}",
+                            esc.lineno, fi.mod.rel)
+        for call in self.index.calls_of(fi):
+            hazard = self.call_hazard(call)
+            if hazard is not None:
+                return MayRaise(
+                    f"{hazard} at {fi.mod.rel}:{call.lineno}",
+                    call.lineno, fi.mod.rel)
+        if depth > 0:
+            for call, callee in self.index.callees(fi):
+                if callee is fi:
+                    continue
+                sub = self.may_raise(callee, depth - 1)
+                if sub is not None:
+                    return MayRaise(
+                        f"calls {callee.name}() which {sub.reason}",
+                        sub.line, sub.where)
+        return None
+
+    @staticmethod
+    def call_hazard(call: ast.Call) -> Optional[str]:
+        """Syntactic may-raise hazards: dispatching a jitted step
+        (`self._jit_*`) or probing the fault injector
+        (`self._faults.check`)."""
+        tail = _tail(call.func)
+        if tail is not None and tail.startswith("_jit"):
+            return f"dispatches {tail}()"
+        if tail == "check" and isinstance(call.func, ast.Attribute) and \
+                _receiver_mentions(call.func.value, "fault"):
+            return "probes the fault injector"
+        return None
+
+    # ---- axis-name value resolution ----------------------------------
+    def axis_values(self, expr: Optional[ast.expr],
+                    fi: Optional[FunctionInfo],
+                    depth: int = SUMMARY_DEPTH,
+                    _seen: Optional[Set] = None) -> \
+            Tuple[Set[str], bool]:
+        """(possible string values, complete).  `None` constants are
+        dropped but stay complete (an IfExp arm disabling the collective
+        axis is fine); any unresolvable path flips complete to False."""
+        if _seen is None:
+            _seen = set()
+        if expr is None:
+            return set(), True
+        if isinstance(expr, ast.Constant):
+            if isinstance(expr.value, str):
+                return {expr.value}, True
+            if expr.value is None:
+                return set(), True
+            return set(), False
+        if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+            return self._union(expr.elts, fi, depth, _seen)
+        if isinstance(expr, ast.IfExp):
+            return self._union([expr.body, expr.orelse], fi, depth,
+                               _seen)
+        if isinstance(expr, ast.BoolOp):
+            return self._union(expr.values, fi, depth, _seen)
+        if isinstance(expr, ast.Name):
+            return self._name_values(expr.id, fi, depth, _seen)
+        if isinstance(expr, ast.Attribute) and \
+                isinstance(expr.value, ast.Name) and \
+                expr.value.id == "self" and fi is not None and \
+                fi.cls is not None:
+            return self._self_attr_values(expr.attr, fi, depth, _seen)
+        return set(), False
+
+    def _union(self, exprs, fi, depth, _seen):
+        vals: Set[str] = set()
+        complete = True
+        for e in exprs:
+            v, c = self.axis_values(e, fi, depth, _seen)
+            vals |= v
+            complete = complete and c
+        return vals, complete
+
+    def _name_values(self, name, fi, depth, _seen):
+        f = fi
+        while f is not None:
+            key = ("name", id(f), name)
+            if key in _seen:
+                return set(), False
+            if name in self.index.param_names(f):
+                _seen.add(key)
+                return self._param_values(f, name, depth, _seen)
+            rhss = self.index.local_assignments(f, name)
+            if rhss:
+                _seen.add(key)
+                return self._union(rhss, f, depth, _seen)
+            f = f.parent
+        if fi is not None:
+            rhss = self.index.module_assignments(fi.mod, name)
+            if rhss:
+                return self._union(rhss, None, depth, _seen)
+        return set(), False
+
+    def _self_attr_values(self, attr, fi, depth, _seen):
+        key = ("attr", fi.cls, attr)
+        if key in _seen:
+            return set(), False
+        _seen.add(key)
+        cls = self.index.classes.get(fi.cls)
+        if cls is None:
+            return set(), False
+        rhss = []
+        for c in self.index._ancestry(fi.cls):
+            for m in c.methods.values():
+                for n in self.index.owned(m):
+                    if isinstance(n, ast.Assign):
+                        for t in n.targets:
+                            if isinstance(t, ast.Attribute) and \
+                                    t.attr == attr and \
+                                    isinstance(t.value, ast.Name) and \
+                                    t.value.id == "self":
+                                rhss.append((n.value, m))
+        if not rhss:
+            return set(), False
+        vals: Set[str] = set()
+        complete = True
+        for rhs, owner in rhss:
+            v, c = self.axis_values(rhs, owner, depth, _seen)
+            vals |= v
+            complete = complete and c
+        return vals, complete
+
+    def _param_values(self, f, name, depth, _seen):
+        """Union of the argument expressions callers pass for
+        parameter `name` of `f` (one level; bounded by `depth`)."""
+        if depth <= 0:
+            return set(), False
+        default = _param_default(f.node, name)
+        sites = self.index.callers_of(f)
+        if not sites:
+            if default is not None:
+                return self.axis_values(default, f.parent, depth - 1,
+                                        _seen)
+            return set(), False
+        vals: Set[str] = set()
+        complete = True
+        for caller, call in sites:
+            arg = _bind_arg(f, call, name)
+            if arg is _MISSING:
+                if default is not None:
+                    v, c = self.axis_values(default, f.parent,
+                                            depth - 1, _seen)
+                    vals |= v
+                    complete = complete and c
+                else:
+                    complete = False
+                continue
+            if arg is _OPAQUE:
+                complete = False
+                continue
+            v, c = self.axis_values(arg, caller, depth - 1, _seen)
+            vals |= v
+            complete = complete and c
+        return vals, complete
+
+
+_MISSING = object()
+_OPAQUE = object()
+
+
+def _param_default(node, name) -> Optional[ast.expr]:
+    a = node.args
+    pos = [*a.posonlyargs, *a.args]
+    n_def = len(a.defaults)
+    for i, p in enumerate(pos):
+        if p.arg == name:
+            j = i - (len(pos) - n_def)
+            return a.defaults[j] if j >= 0 else None
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if p.arg == name:
+            return d
+    return None
+
+
+def _bind_arg(f: FunctionInfo, call: ast.Call, name: str):
+    """The expression `call` passes for `f`'s parameter `name`.
+    Bound-method calls (`obj.m(...)`) skip the `self` slot."""
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+        if kw.arg is None:                 # **kwargs at the site
+            return _OPAQUE
+    if any(isinstance(a, ast.Starred) for a in call.args):
+        return _OPAQUE
+    a = f.node.args
+    pos = [p.arg for p in (*a.posonlyargs, *a.args)]
+    offset = 0
+    if f.cls is not None and pos and pos[0] in ("self", "cls") and \
+            isinstance(call.func, ast.Attribute):
+        offset = 1
+    try:
+        idx = pos.index(name) - offset
+    except ValueError:
+        return _MISSING
+    if 0 <= idx < len(call.args):
+        return call.args[idx]
+    return _MISSING
+
+
+def _escaping_raise(body) -> Optional[ast.Raise]:
+    """First `raise` that can escape the function: raises inside a
+    `try` that has except-handlers are treated as caught (precision
+    over recall); raises inside handler bodies do escape."""
+    for st in body:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            continue
+        if isinstance(st, ast.Raise):
+            return st
+        if isinstance(st, ast.Try):
+            if not st.handlers:
+                hit = _escaping_raise(st.body)
+                if hit is not None:
+                    return hit
+            for h in st.handlers:
+                hit = _escaping_raise(h.body)
+                if hit is not None:
+                    return hit
+            for blk in (st.orelse, st.finalbody):
+                hit = _escaping_raise(blk)
+                if hit is not None:
+                    return hit
+        else:
+            for blk_name in ("body", "orelse", "finalbody"):
+                blk = getattr(st, blk_name, None)
+                if blk:
+                    hit = _escaping_raise(blk)
+                    if hit is not None:
+                        return hit
+    return None
+
+
+def _const_strs(node: ast.AST) -> Set[str]:
+    return {n.value for n in ast.walk(node)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)}

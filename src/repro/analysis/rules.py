@@ -1,11 +1,16 @@
-"""The five repro-lint rules (see repro.analysis.__doc__ for the codes).
+"""The repro-lint rules (see repro.analysis.__doc__ for the codes).
 
-All rules are call-graph-LOCAL by design: they resolve names within one
-module (plus the declared cross-file anchors — the kernel registry in
+RPL001–005 are call-graph-LOCAL: they resolve names within one module
+(plus the declared cross-file anchors — the kernel registry in
 kernels/policy.py, `@worker_only` decorators, registry-named test
-files).  That keeps them fast and predictable; contracts that need
-whole-program reasoning get a runtime guard in `repro.analysis.guards`
-instead.
+files).  RPL006–008 are interprocedural: they run over the whole-project
+symbol table + call graph in `analysis/callgraph.py` with the bounded
+two-level summaries in `analysis/interproc.py` (may-raise, collectives,
+PartitionSpec literals, axis-name value sets).  The bound is the
+contract: anything the two-level inlining cannot resolve is "unknown"
+and unknown is never flagged, so adding reach never adds guesswork.
+Contracts that still need runtime observation keep their guard in
+`repro.analysis.guards`.
 """
 from __future__ import annotations
 
@@ -579,6 +584,526 @@ def rule_rpl005(mod: ParsedModule, ctx: Context) -> List[Finding]:
         for c in key_calls]
 
 
+# ---------------------------------------------------------------------------
+# RPL006 — collective/axis discipline (interprocedural)
+# ---------------------------------------------------------------------------
+
+def _guarded_axes(fi, index) -> Set[str]:
+    """Axis names `fi` checks against `mesh.axis_names` before use:
+    `"model" in mesh.axis_names`, or a comprehension filtering a
+    constant iterable through such a membership test."""
+    guarded: Set[str] = set()
+    comp_iters: Dict[str, List[ast.expr]] = {}
+    for n in index.owned(fi):
+        if isinstance(n, (ast.GeneratorExp, ast.ListComp, ast.SetComp)):
+            for gen in n.generators:
+                if isinstance(gen.target, ast.Name):
+                    comp_iters.setdefault(gen.target.id, []) \
+                        .append(gen.iter)
+    for n in index.owned(fi):
+        if not (isinstance(n, ast.Compare) and len(n.ops) == 1
+                and isinstance(n.ops[0], (ast.In, ast.NotIn))):
+            continue
+        if not any(isinstance(a, ast.Attribute)
+                   and a.attr == "axis_names"
+                   for a in ast.walk(n.comparators[0])):
+            continue
+        guarded |= set(_const_strs(n.left))
+        if isinstance(n.left, ast.Name):
+            for it in comp_iters.get(n.left.id, []):
+                guarded |= set(_const_strs(it))
+    return guarded
+
+
+def _rpl006_partial(fi, summ, index) -> List[Finding]:
+    """Two-level taint inside one shard_map-reachable function:
+    level 1 = a shard-local slice (axis_index + dynamic_slice pattern),
+    level 2 = a matmul-derived partial product over it.  A level-2
+    value escaping via return (or committed to engine state) without a
+    dominating psum is each shard's DIFFERENT partial sum — the PR 8
+    bug class."""
+    from repro.analysis.interproc import MATMUL_TAILS, PSUM_TAILS
+    findings: List[Finding] = []
+    lv: Dict[str, int] = {}
+
+    def level(expr) -> int:
+        if isinstance(expr, ast.Name):
+            return lv.get(expr.id, 0)
+        if isinstance(expr, ast.Call):
+            tail = _attr_tail(expr.func)
+            argl = max((level(a) for a in expr.args), default=0)
+            argl = max(argl, max((level(kw.value)
+                                  for kw in expr.keywords), default=0))
+            if tail in PSUM_TAILS:
+                return 0
+            callees = index.resolve_callable(expr.func, fi, fi.mod)
+            if callees:
+                c = callees[0]
+                if summ.is_shard_local_slicer(c):
+                    return 1
+                if summ.contains_psum(c):
+                    return 0
+                if argl and summ.contains_matmul(c):
+                    return 2
+                return argl
+            if tail in MATMUL_TAILS and argl:
+                return 2
+            return argl
+        if isinstance(expr, ast.BinOp):
+            sub = max(level(expr.left), level(expr.right))
+            if isinstance(expr.op, ast.MatMult) and sub:
+                return 2
+            return sub
+        if isinstance(expr, ast.Attribute):
+            return 0 if expr.attr in _SHAPE_ATTRS else level(expr.value)
+        if isinstance(expr, ast.Subscript):
+            return level(expr.value)
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return max((level(e) for e in expr.elts), default=0)
+        if isinstance(expr, ast.IfExp):
+            return max(level(expr.body), level(expr.orelse))
+        if isinstance(expr, ast.UnaryOp):
+            return level(expr.operand)
+        return 0
+
+    def assign(target, val):
+        if isinstance(target, ast.Name):
+            lv[target.id] = val
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                assign(e, val)
+        elif isinstance(target, ast.Starred):
+            assign(target.value, val)
+        elif isinstance(target, ast.Attribute):
+            if val >= 2 and target.attr in _STATE_ATTRS and \
+                    _attr_root(target) in _ENGINE_NAMES:
+                findings.append(Finding(
+                    fi.mod.rel, target.lineno, target.col_offset,
+                    "RPL006",
+                    f"partial matmul product committed to engine state "
+                    f"`{target.attr}` without a dominating psum: under "
+                    "shard_map each shard stores a different partial "
+                    "sum"))
+        elif isinstance(target, ast.Subscript):
+            assign(target.value, val)
+
+    def walk(stmts):
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue
+            if isinstance(st, ast.Assign):
+                val = level(st.value)
+                for t in st.targets:
+                    assign(t, val)
+            elif isinstance(st, ast.AugAssign):
+                assign(st.target, max(level(st.value),
+                                      level(st.target)))
+            elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                assign(st.target, level(st.value))
+            elif isinstance(st, ast.Return) and st.value is not None:
+                if level(st.value) >= 2:
+                    findings.append(Finding(
+                        fi.mod.rel, st.lineno, st.col_offset, "RPL006",
+                        f"`{fi.name}` returns a matmul over a "
+                        "shard-local slice with no dominating psum on "
+                        "the path: under shard_map every shard returns "
+                        "a DIFFERENT partial sum — wrap the product in "
+                        "jax.lax.psum(..., axis) (or route through a "
+                        "psum-carrying helper)"))
+            else:
+                for blk_name in ("body", "orelse", "finalbody"):
+                    blk = getattr(st, blk_name, None)
+                    if blk:
+                        walk(blk)
+                for h in getattr(st, "handlers", []):
+                    walk(h.body)
+
+    walk(fi.node.body)
+    return findings
+
+
+def rule_rpl006(ctx: Context) -> List[Finding]:
+    from repro.analysis.interproc import Summaries
+    index = ctx.project()
+    summ = Summaries(index)
+    findings: List[Finding] = []
+
+    # (c) mesh.shape["axis"] on a mesh PARAMETER without an axis_names
+    # membership guard anywhere in the function: helpers taking a
+    # caller's mesh must not assume its topology.
+    for fi in index.functions.values():
+        if "mesh" not in index.param_names(fi):
+            continue
+        guarded = _guarded_axes(fi, index)
+        for n in index.owned(fi):
+            if not (isinstance(n, ast.Subscript)
+                    and isinstance(n.value, ast.Attribute)
+                    and n.value.attr == "shape"
+                    and isinstance(n.value.value, ast.Name)
+                    and n.value.value.id == "mesh"):
+                continue
+            sl = n.slice
+            if isinstance(sl, ast.Constant) and \
+                    isinstance(sl.value, str) and sl.value not in guarded:
+                findings.append(Finding(
+                    fi.mod.rel, n.lineno, n.col_offset, "RPL006",
+                    f"`mesh.shape[{sl.value!r}]` in `{fi.name}` without "
+                    f"checking {sl.value!r} in mesh.axis_names: "
+                    "KeyErrors (or silently mis-shards) on meshes that "
+                    "don't declare the axis — guard the lookup or use "
+                    "mesh.shape.get"))
+
+    # (a)+(b): shard_map-reachable functions
+    roots = index.shard_map_roots()
+    declared_of = {id(r): (summ.p_literals(r.binder)
+                           if r.binder is not None else set())
+                   for r in roots}
+    reach = index.reachable([r.fn for r in roots])
+    for fi, root_fns in reach.items():
+        rs = [r for r in roots if r.fn in root_fns]
+        declared: Set[str] = set()
+        for r in rs:
+            declared |= declared_of[id(r)]
+        declared_known = bool(rs) and \
+            all(declared_of[id(r)] for r in rs)
+        if declared_known:
+            for coll in summ.collectives(fi):
+                vals, complete = summ.axis_values(coll.axis, fi)
+                if complete and vals and not vals <= declared:
+                    related = tuple((r.binder.mod.rel, r.call.lineno)
+                                    for r in rs if r.binder is not None)
+                    findings.append(Finding(
+                        fi.mod.rel, coll.call.lineno,
+                        coll.call.col_offset, "RPL006",
+                        f"`{coll.kind}` over axis "
+                        f"{sorted(vals - declared)} inside "
+                        f"shard_map-reachable `{fi.name}`, but the "
+                        "binding shard_map's PartitionSpecs only "
+                        f"declare {sorted(declared)}: an undeclared "
+                        "axis name fails at trace time (or silently "
+                        "no-ops under a differently-named mesh)",
+                        related=related))
+        findings.extend(_rpl006_partial(fi, summ, index))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPL007 — Pallas block contract (interprocedural)
+# ---------------------------------------------------------------------------
+
+def _sibling_module(ctx: Context, mod: ParsedModule,
+                    stem: str) -> Optional[ParsedModule]:
+    path = mod.path.parent / f"{stem}.py"
+    key = str(path)
+    if key in ctx.modules:
+        return ctx.modules[key]
+    if path.exists():
+        from repro.analysis.core import parse_file
+        return parse_file(path, ctx.root)
+    return None
+
+
+def _required_params(fn) -> Set[str]:
+    a = fn.args
+    pos = [*a.posonlyargs, *a.args]
+    required = {p.arg for p in pos[:len(pos) - len(a.defaults)]}
+    required |= {p.arg for p, d in zip(a.kwonlyargs, a.kw_defaults)
+                 if d is None}
+    return required
+
+
+def _all_params(fn) -> Set[str]:
+    a = fn.args
+    return {p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)}
+
+
+def _index_map_lambda(expr, fi, index):
+    """Resolve a BlockSpec index_map argument to a Lambda node: either
+    inline, or a local name bound to one (`row = lambda b: (b, 0)`)."""
+    if isinstance(expr, ast.Lambda):
+        return expr
+    if isinstance(expr, ast.Name) and fi is not None:
+        for rhs in index.local_assignments(fi, expr.id):
+            if isinstance(rhs, ast.Lambda):
+                return rhs
+    return None
+
+
+def _index_map_violations(lam) -> List[str]:
+    params = {a.arg for a in (*lam.args.posonlyargs, *lam.args.args,
+                              *lam.args.kwonlyargs)}
+    fn_names = set()
+    for n in ast.walk(lam.body):
+        if isinstance(n, ast.Call):
+            for f in ast.walk(n.func):
+                if isinstance(f, ast.Name):
+                    fn_names.add(id(f))
+    out = []
+    for n in ast.walk(lam.body):
+        if isinstance(n, ast.Name) and n.id not in params and \
+                id(n) not in fn_names:
+            out.append(f"closes over `{n.id}`")
+        elif isinstance(n, ast.Constant) and \
+                not isinstance(n.value, int):
+            out.append(f"non-integer constant {n.value!r}")
+    return sorted(set(out))
+
+
+def _guards_divisibility(fi, index, depth: int = 2,
+                         _seen=None) -> bool:
+    if fi is None:
+        return False
+    if _seen is None:
+        _seen = set()
+    if id(fi) in _seen:
+        return False
+    _seen.add(id(fi))
+    # operator nodes are interpreter singletons, so test the BinOp /
+    # AugAssign carriers rather than the ast.Mod instances themselves
+    if any(isinstance(n, (ast.BinOp, ast.AugAssign))
+           and isinstance(n.op, ast.Mod)
+           for n in ast.walk(fi.node)):
+        return True
+    if depth > 0:
+        return any(_guards_divisibility(callee, index, depth - 1, _seen)
+                   for _, callee in index.callees(fi))
+    return False
+
+
+def rule_rpl007(ctx: Context) -> List[Finding]:
+    index = ctx.project()
+    findings: List[Finding] = []
+    for mod in list(ctx.modules.values()):
+        if mod.path.parent.name != "kernels" or \
+                mod.path.stem in _KERNEL_EXEMPT:
+            continue
+        calls = [n for n in ast.walk(mod.tree)
+                 if isinstance(n, ast.Call)
+                 and _attr_tail(n.func) == "pallas_call"]
+        if not calls:
+            continue
+        at = calls[0]
+        policy = _sibling_module(ctx, mod, "policy")
+        registry, reg_line = _load_registry(policy) \
+            if policy is not None else (None, 1)
+        entry_meta = (registry or {}).get(mod.path.stem)
+        if entry_meta is None:
+            continue                       # RPL002's finding; don't dup
+        entry_name = entry_meta.get("entry")
+        if not entry_name:
+            findings.append(Finding(
+                policy.rel, reg_line, 0, "RPL007",
+                f"KERNEL_REGISTRY[{mod.path.stem!r}] has no 'entry' "
+                "metadata naming the public wrapper whose signature "
+                "mirrors the ref twin and whose body guards the grid"))
+            continue
+        entry_fn = next(
+            (n for n in mod.tree.body
+             if isinstance(n, ast.FunctionDef) and n.name == entry_name),
+            None)
+        if entry_fn is None:
+            findings.append(Finding(
+                mod.rel, at.lineno, at.col_offset, "RPL007",
+                f"registered entry wrapper `{entry_name}` is not "
+                f"defined at module level in {mod.rel}"))
+            continue
+
+        # signature parity: some registered ref twin's REQUIRED params
+        # must all appear in the entry wrapper's signature, so the
+        # policy can swap entry<->ref call-compatibly.
+        ref_mod = _sibling_module(ctx, mod, "ref")
+        refs = entry_meta.get("ref", [])
+        refs = refs if isinstance(refs, (list, tuple)) else [refs]
+        ref_fns = []
+        if ref_mod is not None:
+            ref_fns = [n for n in ref_mod.tree.body
+                       if isinstance(n, ast.FunctionDef)
+                       and n.name in refs]
+        if ref_fns:
+            entry_params = _all_params(entry_fn)
+            if not any(_required_params(r) <= entry_params
+                       for r in ref_fns):
+                want = sorted(_required_params(ref_fns[0]) - entry_params)
+                findings.append(Finding(
+                    mod.rel, entry_fn.lineno, entry_fn.col_offset,
+                    "RPL007",
+                    f"entry wrapper `{entry_name}` matches no "
+                    f"registered ref twin's required signature "
+                    f"(e.g. `{ref_fns[0].name}` needs {want}): policy "
+                    "dispatch between kernel and ref would TypeError"))
+
+        # index_map outputs must be pure functions of the grid indices
+        for call in ast.walk(mod.tree):
+            if not (isinstance(call, ast.Call)
+                    and _attr_tail(call.func) == "BlockSpec"):
+                continue
+            im = next((kw.value for kw in call.keywords
+                       if kw.arg == "index_map"),
+                      call.args[1] if len(call.args) > 1 else None)
+            if im is None:
+                continue
+            lam = _index_map_lambda(im, index.owner.get(call), index)
+            if lam is None:
+                continue
+            for why in _index_map_violations(lam):
+                findings.append(Finding(
+                    mod.rel, lam.lineno, lam.col_offset, "RPL007",
+                    f"BlockSpec index_map {why}: index maps must be "
+                    "pure functions of the grid indices (plus int "
+                    "literals) or the block offsets silently read the "
+                    "wrong tiles"))
+
+        # shape_guard 'checked' means the divisibility check must
+        # dominate each pallas_call (same function or a callee)
+        if entry_meta.get("shape_guard") == "checked":
+            for call in calls:
+                encl = index.owner.get(call)
+                if not _guards_divisibility(encl, index):
+                    findings.append(Finding(
+                        mod.rel, call.lineno, call.col_offset, "RPL007",
+                        "pallas_call under shape_guard 'checked' whose "
+                        "enclosing function (and two callee levels) has "
+                        "no divisibility (%) check: the grid contract "
+                        "is asserted by the registry but not enforced "
+                        "on this call path"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPL008 — commit discipline (interprocedural)
+# ---------------------------------------------------------------------------
+
+# transactional slot/pool state: RPL003's attrs minus the readout
+# payload (`result`, owned per-session) and the forensics log
+# (`_fault_log`, append-only and harvested after recovery)
+_RPL008_ATTRS = _STATE_ATTRS - {"result", "_fault_log"}
+_RPL008_RECEIVERS = {"self", "eng", "engine"}
+_MUTATOR_METHODS = {"append", "extend", "update", "clear", "pop",
+                    "remove", "insert", "fill", "setdefault"}
+
+
+def _state_attr_of(node) -> Optional[str]:
+    t = node
+    if isinstance(t, ast.Subscript):
+        t = t.value
+    if isinstance(t, ast.Attribute) and t.attr in _RPL008_ATTRS and \
+            _attr_root(t) in _RPL008_RECEIVERS:
+        return t.attr
+    return None
+
+
+def _rpl008_fn(fi, summ, index) -> List[Finding]:
+    """Execution-order walk flagging a DIRECT engine-state mutation
+    followed by a may-raise call (jit dispatch, fault-injector probe,
+    or a callee that raises — two levels deep).  Loop bodies are walked
+    once (each iteration is its own transaction), except-handler bodies
+    are recovery code and skipped, and a try with handlers or a
+    state-restoring finally protects its calls."""
+    findings: List[Finding] = []
+    pending: List[Tuple[str, int]] = []
+
+    def hazard_of(call):
+        h = summ.call_hazard(call)
+        if h is not None:
+            return h, ()
+        for tgt in index.resolve_callable(call.func, fi, fi.mod):
+            if tgt is fi:
+                continue
+            mr = summ.may_raise(tgt)
+            if mr is not None:
+                return (f"calls `{tgt.name}()` which {mr.reason}",
+                        ((mr.where, mr.line),))
+        return None
+
+    def check_calls(node, protected):
+        for n in ast.walk(node):
+            if not (isinstance(n, ast.Call)
+                    and index.owner.get(n) is fi):
+                continue
+            hz = hazard_of(n)
+            if hz is None or not pending or protected:
+                continue
+            attr, mline = pending[0]
+            reason, related = hz
+            findings.append(Finding(
+                fi.mod.rel, n.lineno, n.col_offset, "RPL008",
+                f"engine state `{attr}` mutated at line {mline} and "
+                f"then a may-raise call runs ({reason}): a raise "
+                "leaves the slot/pool half-committed — stage results "
+                "locally and commit after the call, probe with "
+                "commit=False first, or restore in a finally",
+                related=((fi.mod.rel, mline),) + related))
+
+    def record(st):
+        if isinstance(st, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = st.targets if isinstance(st, ast.Assign) \
+                else [st.target]
+            for t in targets:
+                attr = _state_attr_of(t)
+                if attr is not None:
+                    pending.append((attr, st.lineno))
+        elif isinstance(st, ast.Expr) and isinstance(st.value, ast.Call):
+            c = st.value
+            if isinstance(c.func, ast.Attribute) and \
+                    c.func.attr in _MUTATOR_METHODS:
+                attr = _state_attr_of(c.func.value)
+                if attr is not None:
+                    pending.append((attr, st.lineno))
+
+    def finally_restores(st) -> bool:
+        for blk_st in st.finalbody:
+            for n in ast.walk(blk_st):
+                if isinstance(n, (ast.Assign, ast.AugAssign,
+                                  ast.AnnAssign)):
+                    targets = n.targets if isinstance(n, ast.Assign) \
+                        else [n.target]
+                    if any(_state_attr_of(t) is not None
+                           for t in targets):
+                        return True
+        return False
+
+    def walk(stmts, protected):
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue
+            if isinstance(st, ast.Try):
+                prot = protected or bool(st.handlers) or \
+                    finally_restores(st)
+                walk(st.body, prot)
+                walk(st.orelse, prot)
+                walk(st.finalbody, protected)
+            elif isinstance(st, (ast.If, ast.While)):
+                check_calls(st.test, protected)
+                walk(st.body, protected)
+                walk(st.orelse, protected)
+            elif isinstance(st, ast.For):
+                check_calls(st.iter, protected)
+                walk(st.body, protected)
+                walk(st.orelse, protected)
+            elif isinstance(st, ast.With):
+                for item in st.items:
+                    check_calls(item.context_expr, protected)
+                walk(st.body, protected)
+            else:
+                check_calls(st, protected)
+                record(st)
+
+    walk(fi.node.body, False)
+    return findings
+
+
+def rule_rpl008(ctx: Context) -> List[Finding]:
+    from repro.analysis.interproc import Summaries
+    index = ctx.project()
+    summ = Summaries(index)
+    findings: List[Finding] = []
+    for fi in index.functions.values():
+        findings.extend(_rpl008_fn(fi, summ, index))
+    return findings
+
+
 PER_FILE_RULES = {
     "RPL001": rule_rpl001,
     "RPL003": rule_rpl003,
@@ -588,6 +1113,9 @@ PER_FILE_RULES = {
 
 GLOBAL_RULES = {
     "RPL002": rule_rpl002,
+    "RPL006": rule_rpl006,
+    "RPL007": rule_rpl007,
+    "RPL008": rule_rpl008,
 }
 
 

@@ -71,46 +71,57 @@ def resolve(policy: KernelPolicy | None, *, hot: bool = False) -> str:
 
 
 # Kernel contract registry, consumed by `python -m repro.analysis`
-# (rule RPL002): every module under kernels/ with a `pl.pallas_call`
-# site declares its ref.py twin, the interpret-parity test that pins
-# kernel==ref, and how its grid/BlockSpec divisibility assumption is
-# handled — "checked" means the module itself guards it with a
-# divisibility check (assert / pad / tile-halving), "fallback: ..."
-# documents why no in-module check is needed.  Must stay a pure dict
-# literal: the analyzer reads it with ast.literal_eval, never imports.
+# (rules RPL002 + RPL007): every module under kernels/ with a
+# `pl.pallas_call` site declares its ref.py twin, the interpret-parity
+# test that pins kernel==ref, the public "entry" wrapper whose
+# signature must stay call-compatible with a ref twin (RPL007 checks
+# parity and that the divisibility guard dominates each pallas_call in
+# the entry's reach), and how its grid/BlockSpec divisibility
+# assumption is handled — "checked" means the module itself guards it
+# with a divisibility check (assert / pad / tile-halving),
+# "fallback: ..." documents why no in-module check is needed.  Must
+# stay a pure dict literal: the analyzer reads it with
+# ast.literal_eval, never imports.
 KERNEL_REGISTRY = {
     "tds_conv": {
         "ref": ["tds_conv", "tds_conv_fused"],
+        "entry": "tds_conv_pallas",
         "test": "tests/test_kernels.py",
         "shape_guard": "checked",   # stride assert + bt halved to divide
     },
     "layernorm": {
         "ref": ["layernorm", "rmsnorm"],
+        "entry": "norm_pallas",
         "test": "tests/test_kernels.py",
         "shape_guard": "checked",   # rows padded to the bt tile
     },
     "logmel": {
         "ref": "logmel",
+        "entry": "logmel_pallas",
         "test": "tests/test_kernels.py",
         "shape_guard": "checked",   # frames padded to the bt tile
     },
     "flash_attention": {
         "ref": "flash_attention",
+        "entry": "flash_attention_pallas",
         "test": "tests/test_kernels.py",
         "shape_guard": "checked",   # asserts Sq/Sk divisible by blocks
     },
     "beam_prune": {
         "ref": "beam_prune",
+        "entry": "beam_prune_pallas",
         "test": "tests/test_kernels.py",
         "shape_guard": "checked",   # candidates padded to the bn tile
     },
     "int8_matmul": {
         "ref": "int8_matmul",
+        "entry": "int8_matmul_pallas",
         "test": "tests/test_kernels.py",
         "shape_guard": "checked",   # bm/bn/bk asserted or halved to fit
     },
     "hypothesis_unit": {
         "ref": ["hypothesis_unit", "merge_select_sorted"],
+        "entry": "hypothesis_unit_pallas",
         "test": "tests/test_hypothesis_unit.py",
         "shape_guard": "fallback: callers route through "
                        "ops._hypothesis_unit, which pads candidate rows "

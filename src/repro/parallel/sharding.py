@@ -176,6 +176,16 @@ def _axsize(mesh: Mesh, axes) -> int:
     return n
 
 
+def axis_size(mesh: Mesh, name: str):
+    """Size of mesh axis `name`, or None when the mesh doesn't declare
+    it: callers fall back to replicated instead of KeyErroring on a
+    mesh without the axis (a 1D ('data',) serving mesh reaching the
+    'model' rules, and vice versa)."""
+    if name in mesh.axis_names:
+        return mesh.shape[name]
+    return None
+
+
 # ---------------------------------------------------------------------------
 # parameter sharding rules
 # ---------------------------------------------------------------------------
@@ -190,7 +200,7 @@ def _param_rule(path: tuple, shape: tuple, cfg, mesh: Mesh) -> P:
         spec_w = _param_rule(_names_path(names[:-1] + ["w"]), fake, cfg, mesh)
         return P(*(list(spec_w)[:-2] + [list(spec_w)[-1]]))
     fsdp = batch_axes(mesh)
-    nm = mesh.shape["model"]
+    nm = axis_size(mesh, "model")
     in_layers = "layers" in names
     leaf = names[-1]
     parent = names[-2] if len(names) >= 2 else ""
@@ -207,7 +217,8 @@ def _param_rule(path: tuple, shape: tuple, cfg, mesh: Mesh) -> P:
                 out.append(None)
                 continue
             axes = d if isinstance(d, tuple) else (d,)
-            if _axsize(mesh, axes) and size % _axsize(mesh, axes) == 0:
+            if all(a in mesh.axis_names for a in axes) and \
+                    _axsize(mesh, axes) and size % _axsize(mesh, axes) == 0:
                 out.append(d)
             else:
                 out.append(None)
@@ -236,7 +247,7 @@ def _param_rule(path: tuple, shape: tuple, cfg, mesh: Mesh) -> P:
         pass  # dense MLP handled below
     if names.count("mlp") and cfg is not None and cfg.moe is not None and \
             len(shape) - (1 if in_layers else 0) == 3:
-        ep = cfg.moe.n_experts % nm == 0
+        ep = nm is not None and cfg.moe.n_experts % nm == 0
         if leaf in ("w_gate", "w_up") or parent in ("w_gate", "w_up"):
             return spec("model", fsdp, None) if ep else spec(None, fsdp, "model")
         return spec("model", None, fsdp) if ep else spec(None, "model", fsdp)
@@ -278,9 +289,10 @@ def tds_param_specs(tds_cfg, mesh: Mesh) -> dict:
     each program computes one slice of a layer — while convs, LayerNorm
     vectors, and biases stay replicated (they are KBs against the FCs'
     MBs).  Weights whose feature dim does not divide the axis fall back
-    to replicated (same safety net as `_param_rule`)."""
+    to replicated (same safety net as `_param_rule`), as does every
+    weight when the mesh has no 'model' axis at all."""
     from repro.models.tds import build_kernel_specs
-    nm = mesh.shape["model"]
+    nm = axis_size(mesh, "model")
     out = {}
     for s in build_kernel_specs(tds_cfg):
         if s.kind == "layernorm":
@@ -288,7 +300,7 @@ def tds_param_specs(tds_cfg, mesh: Mesh) -> dict:
         elif s.kind == "conv":
             out[s.name] = {"w": P(), "b": P()}
         else:  # fc / head
-            w = P("model", None) if s.n_in % nm == 0 else P()
+            w = P("model", None) if nm and s.n_in % nm == 0 else P()
             out[s.name] = {"w": w, "b": P()}
     return out
 
@@ -300,8 +312,9 @@ def tds_prepared_specs(tds_cfg, mesh: Mesh) -> dict:
     quantization runs on the full (replicated) rows, so the sharded int8
     path sees the same scales as the unsharded one."""
     from repro.models.tds import build_kernel_specs
-    nm = mesh.shape["model"]
-    return {s.name: {"wq": P("model", None) if s.n_in % nm == 0 else P(),
+    nm = axis_size(mesh, "model")
+    return {s.name: {"wq": P("model", None) if nm and s.n_in % nm == 0
+                     else P(),
                      "ws": P()}
             for s in build_kernel_specs(tds_cfg)
             if s.kind in ("fc", "head")}
@@ -323,11 +336,12 @@ def asr_state_specs(tree, mesh: Mesh):
     construction: state never touches the 'model' axis).  Leaves whose
     leading dim does not divide the axis fall back to replicated (the
     engine enforces divisibility for the pool; this is the same safety
-    net as `_param_rule`)."""
-    nd = mesh.shape["data"]
+    net as `_param_rule`); so does everything on a mesh with no 'data'
+    axis (the 1D model-parallel serving mesh)."""
+    nd = axis_size(mesh, "data")
 
     def f(leaf):
-        if leaf.ndim >= 1 and leaf.shape[0] % nd == 0:
+        if nd and leaf.ndim >= 1 and leaf.shape[0] % nd == 0:
             return P("data", *([None] * (leaf.ndim - 1)))
         return P(*([None] * leaf.ndim))
 
@@ -363,8 +377,8 @@ def cache_shardings(cfg, cache_shapes, mesh: Mesh, global_batch: int):
     b_axes = batch_axes(mesh)
     nb = _axsize(mesh, b_axes)
     batch_ok = b_axes and global_batch % nb == 0
-    nm = mesh.shape["model"]
-    seq_axes = ("model",) if batch_ok else tuple(
+    nm = axis_size(mesh, "model")
+    seq_axes = ("model",) if batch_ok and nm else tuple(
         a for a in ("data", "model") if a in mesh.axis_names)
     nseq = _axsize(mesh, seq_axes)
 
@@ -381,10 +395,10 @@ def cache_shardings(cfg, cache_shapes, mesh: Mesh, global_batch: int):
             sseq = seq_axes if leaf.shape[2] % nseq == 0 else None
             return NamedSharding(mesh, P(None, bspec, sseq, None, None))
         if leafname == "ssm":                 # (R, B, H, P, N)
-            sh = "model" if leaf.shape[2] % nm == 0 else None
+            sh = "model" if nm and leaf.shape[2] % nm == 0 else None
             return NamedSharding(mesh, P(None, bspec, sh, None, None))
         if leafname == "conv":                # (R, B, ck-1, di)
-            sd = "model" if leaf.shape[3] % nm == 0 else None
+            sd = "model" if nm and leaf.shape[3] % nm == 0 else None
             return NamedSharding(mesh, P(None, bspec, None, sd))
         return NamedSharding(mesh, P(*([None] * leaf.ndim)))
     return jax.tree_util.tree_map_with_path(f, cache_shapes)

@@ -124,6 +124,19 @@ class AsrEngine(Engine):
                            and "data" in mesh.axis_names else None)
         self._n_data = mesh.shape["data"] if self._data_axis else 1
         self._slots_per_shard = self.n_slots // self._n_data
+        # per-step batch/idx uploads are placed EXPLICITLY with the
+        # step's in_specs sharding: jnp.asarray would commit them to one
+        # device and every dispatch would then reshard them through an
+        # implicit transfer (caught by no_implicit_transfers(strict=True))
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            dspec = ((P("data", None, None), P("data"))
+                     if self._data_axis else (P(), P()))
+            self._input_shardings = tuple(
+                NamedSharding(mesh, s) for s in dspec)
+        else:
+            self._input_shardings = None
         self._buckets = self.program.step_buckets()
         self._slot_buckets = self._make_slot_buckets()
         # int8 weights are quantized exactly ONCE, here — the decoding
@@ -310,25 +323,30 @@ class AsrEngine(Engine):
         self.step_shapes: deque = deque(maxlen=4096)
 
     def _ensure_state(self) -> None:
-        if self._stream_state is None:
-            self._stream_state = tds.init_batched_stream_state(
-                self.program.tds_cfg, self.n_slots)
-            self._beam = dec.init_batched_state(
-                self.n_slots, self.program.dec_cfg.beam_size,
-                self.program.lm)
-            if self._data_axis is not None:
-                # place the pool slot-axis-sharded from the start so the
-                # sharded step never reshards it (outputs keep the
-                # sharding via out_specs; resets/readouts go through
-                # plain jit, which GSPMD handles on sharded inputs)
-                from repro.parallel import sharding as shlib
-                mesh = self.config.mesh
-                self._stream_state = shlib.place_tree(
-                    self._stream_state,
-                    shlib.asr_state_specs(self._stream_state, mesh), mesh)
-                self._beam = shlib.place_tree(
-                    self._beam,
-                    shlib.asr_state_specs(self._beam, mesh), mesh)
+        if self._stream_state is not None:
+            return
+        # build + place locally, commit both attrs only once everything
+        # succeeded: a device_put failure must not leave the pool with a
+        # stream state but no beam (commit discipline, RPL008's pattern)
+        stream_state = tds.init_batched_stream_state(
+            self.program.tds_cfg, self.n_slots)
+        beam = dec.init_batched_state(
+            self.n_slots, self.program.dec_cfg.beam_size,
+            self.program.lm)
+        if self._data_axis is not None:
+            # place the pool slot-axis-sharded from the start so the
+            # sharded step never reshards it (outputs keep the
+            # sharding via out_specs; resets/readouts go through
+            # plain jit, which GSPMD handles on sharded inputs)
+            from repro.parallel import sharding as shlib
+            mesh = self.config.mesh
+            stream_state = shlib.place_tree(
+                stream_state,
+                shlib.asr_state_specs(stream_state, mesh), mesh)
+            beam = shlib.place_tree(
+                beam, shlib.asr_state_specs(beam, mesh), mesh)
+        self._stream_state = stream_state
+        self._beam = beam
 
     def adopt_state(self, old: "AsrEngine") -> None:
         """Take over another engine's in-flight slot-pool state (sample
@@ -344,12 +362,18 @@ class AsrEngine(Engine):
 
     def reset_slot(self, slot: int) -> None:
         """Utterance boundary in one slot: clear its buffer, left
-        context, and hypothesis memory; other slots are untouched."""
+        context, and hypothesis memory; other slots are untouched.
+
+        The jitted reset dispatch runs FIRST: it can raise (OOM, a
+        poisoned donated buffer), and committing the cleared host-side
+        buffers before it would leave the slot half-reset — empty
+        buffer, stale beam (RPL008)."""
+        if self._stream_state is not None:
+            new_stream, new_beam = self._jit_reset(
+                self._stream_state, self._beam, slot)
+            self._stream_state, self._beam = new_stream, new_beam
         self._slot_bufs[slot] = np.zeros((0,), np.float32)
         self._slot_steps[slot] = 0
-        if self._stream_state is not None:
-            self._stream_state, self._beam = self._jit_reset(
-                self._stream_state, self._beam, slot)
 
     def feed_slot(self, slot: int, samples) -> None:
         """Append raw samples to one slot's stream buffer.  Feeding marks
@@ -480,9 +504,14 @@ class AsrEngine(Engine):
         # host->device traffic per step; anything implicit (a stray
         # numpy weight, a scalar readback inside dispatch) is a bug
         with no_implicit_transfers():
+            if self._input_shardings is not None:
+                batch_d, idx_d = jax.device_put(
+                    (batch, idx), self._input_shardings)
+            else:
+                batch_d, idx_d = jnp.asarray(batch), jnp.asarray(idx)
             new_ss, new_beam = self._jit_step(
                 self.params, self._prepared, self._stream_state, self._beam,
-                jnp.asarray(batch), jnp.asarray(idx))
+                batch_d, idx_d)
         if not commit:
             return
         self._stream_state, self._beam = new_ss, new_beam

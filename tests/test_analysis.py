@@ -1,8 +1,10 @@
 """repro-lint (src/repro/analysis): per-rule fixture snippets
 (positive + suppressed + clean, including minimized reproductions of
-the PR 5 mesh-dependent-RNG bug and the PR 6 poll-aliasing bug), the
-suppression syntax, the runtime guards, and a self-run over src/repro
-pinning the tree clean."""
+the PR 5 mesh-dependent-RNG bug, the PR 6 poll-aliasing bug, the PR 8
+partial-psum bug, and the PR 9 half-committed-slot bug), the
+suppression syntax (including the interprocedural related-location
+form), the baseline / GitHub-annotation CLI modes, the runtime guards,
+and a self-run over src/repro pinning the tree clean."""
 import pathlib
 import textwrap
 import threading
@@ -417,12 +419,376 @@ def test_rpl005_clean_shard_map_with_mesh_invariant_rng(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# RPL006 — collective/axis discipline (interprocedural; minimized PR 8 bug)
+# ---------------------------------------------------------------------------
+
+def test_rpl006_fires_on_undeclared_collective_axis(tmp_path):
+    # psum over "model" inside a function traced by a shard_map whose
+    # PartitionSpecs only declare "data" — fails at trace time on the
+    # real mesh, and the finding carries the binder as a related site
+    findings, _ = lint_snippet(tmp_path, """
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def step(x):
+            return jax.lax.psum(x, "model")
+
+        def build(mesh):
+            return shard_map(step, mesh=mesh,
+                             in_specs=(P("data"),), out_specs=P("data"))
+    """, rules=["RPL006"])
+    assert codes(findings) == ["RPL006"]
+    assert "psum" in findings[0].message and "'model'" in findings[0].message
+    assert findings[0].related            # binder call site attached
+
+
+def test_rpl006_clean_on_declared_axis(tmp_path):
+    findings, _ = lint_snippet(tmp_path, """
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def step(x):
+            return jax.lax.psum(x, "data")
+
+        def build(mesh):
+            return shard_map(step, mesh=mesh,
+                             in_specs=(P("data"),), out_specs=P("data"))
+    """, rules=["RPL006"])
+    assert findings == []
+
+
+PR8_BUG = """
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    W = None
+
+    def shard_cols(w):
+        i = jax.lax.axis_index("model")
+        return jax.lax.dynamic_slice(w, (0, i * 4), (8, 4))
+
+    def step(x):
+        wl = shard_cols(W)
+        return {ret}
+
+    def build(mesh):
+        return shard_map(step, mesh=mesh,
+                         in_specs=(P("model"),), out_specs=P())
+"""
+
+
+def test_rpl006_fires_on_pr8_partial_matmul_repro(tmp_path):
+    # the PR 8 silent-wrong-numerics class: each shard returns its
+    # DIFFERENT partial product because the psum is missing
+    findings, _ = lint_snippet(
+        tmp_path, PR8_BUG.format(ret="x @ wl"), rules=["RPL006"])
+    assert codes(findings) == ["RPL006"]
+    assert "partial sum" in findings[0].message
+
+
+def test_rpl006_clean_with_dominating_psum(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, PR8_BUG.format(ret='jax.lax.psum(x @ wl, "model")'),
+        rules=["RPL006"])
+    assert findings == []
+
+
+def test_rpl006_fires_on_unguarded_mesh_shape_lookup(tmp_path):
+    findings, _ = lint_snippet(tmp_path, """
+        def param_spec(mesh, size):
+            return size // mesh.shape["model"]
+    """, rules=["RPL006"])
+    assert codes(findings) == ["RPL006"]
+    assert "axis_names" in findings[0].message
+
+
+def test_rpl006_clean_on_guarded_mesh_shape_lookup(tmp_path):
+    # regression fixture for the sharding.py fix: the guarded helper
+    # form (membership test before the lookup) is clean, and callers
+    # that route through it never touch mesh.shape directly
+    findings, _ = lint_snippet(tmp_path, """
+        def axis_size(mesh, name):
+            return mesh.shape[name] if name in mesh.axis_names else None
+
+        def param_spec(mesh, size):
+            nm = axis_size(mesh, "model")
+            return size // nm if nm and size % nm == 0 else size
+    """, rules=["RPL006"])
+    assert findings == []
+
+
+def test_rpl006_suppressed_at_collective_line(tmp_path):
+    findings, suppressed = lint_snippet(tmp_path, """
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def step(x):
+            return jax.lax.psum(x, "model")  # repro-lint: disable=RPL006
+
+        def build(mesh):
+            return shard_map(step, mesh=mesh,
+                             in_specs=(P("data"),), out_specs=P("data"))
+    """, rules=["RPL006"])
+    assert findings == []
+    assert codes(suppressed) == ["RPL006"]
+
+
+def test_rpl006_suppressed_at_related_binder_line(tmp_path):
+    """Interprocedural findings carry related locations: a disable at
+    the shard_map BINDER call silences the finding inside the root
+    function too (the binder owns the axis declaration)."""
+    findings, suppressed = lint_snippet(tmp_path, """
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def step(x):
+            return jax.lax.psum(x, "model")
+
+        def build(mesh):
+            # repro-lint: disable=RPL006
+            return shard_map(step, mesh=mesh,
+                             in_specs=(P("data"),), out_specs=P("data"))
+    """, rules=["RPL006"])
+    assert findings == []
+    assert codes(suppressed) == ["RPL006"]
+
+
+# ---------------------------------------------------------------------------
+# RPL007 — Pallas block contract
+# ---------------------------------------------------------------------------
+
+REGISTRY_FULL = """
+    KERNEL_REGISTRY = {{
+        "foo": {{"ref": "foo", "test": "tests/test_foo.py",
+                "shape_guard": "checked"{extra}}},
+    }}
+"""
+
+KERNEL_OK = """
+    from jax.experimental import pallas as pl
+
+    def run(x, bt=8):
+        T = x.shape[0]
+        assert T % bt == 0
+        return pl.pallas_call(lambda r, o: None, grid=(T // bt,))(x)
+"""
+
+
+def _rpl007_tree(tmp_path, registry_body, kernel_body=KERNEL_OK,
+                 ref_body="def foo(x):\n    return x\n"):
+    kdir = tmp_path / "kernels"
+    kdir.mkdir(exist_ok=True)
+    (kdir / "ref.py").write_text(ref_body)
+    (kdir / "policy.py").write_text(textwrap.dedent(registry_body))
+    (kdir / "foo.py").write_text(textwrap.dedent(kernel_body))
+    return run_paths([str(kdir)], rules=["RPL007"], root=tmp_path)
+
+
+def test_rpl007_fires_on_missing_entry_metadata(tmp_path):
+    findings, _ = _rpl007_tree(
+        tmp_path, REGISTRY_FULL.format(extra=""))
+    assert codes(findings) == ["RPL007"]
+    assert "'entry'" in findings[0].message
+
+
+def test_rpl007_fires_on_undefined_entry_wrapper(tmp_path):
+    findings, _ = _rpl007_tree(
+        tmp_path, REGISTRY_FULL.format(extra=', "entry": "nope"'))
+    assert codes(findings) == ["RPL007"]
+    assert "not defined" in findings[0].message
+
+
+def test_rpl007_fires_on_signature_parity_break(tmp_path):
+    # ref twin requires (x, scale); the entry wrapper only takes (x):
+    # policy dispatch between kernel and ref would TypeError
+    findings, _ = _rpl007_tree(
+        tmp_path, REGISTRY_FULL.format(extra=', "entry": "run"'),
+        ref_body="def foo(x, scale):\n    return x * scale\n")
+    assert codes(findings) == ["RPL007"]
+    assert "scale" in findings[0].message
+
+
+def test_rpl007_fires_on_index_map_closure(tmp_path):
+    findings, _ = _rpl007_tree(
+        tmp_path, REGISTRY_FULL.format(extra=', "entry": "run"'),
+        kernel_body="""
+            from jax.experimental import pallas as pl
+
+            OFFSET = 3
+
+            def run(x, bt=8):
+                T = x.shape[0]
+                assert T % bt == 0
+                spec = pl.BlockSpec((bt,),
+                                    index_map=lambda i: (i + OFFSET,))
+                return pl.pallas_call(lambda r, o: None, grid=(T // bt,),
+                                      in_specs=[spec])(x)
+        """)
+    assert codes(findings) == ["RPL007"]
+    assert "closes over `OFFSET`" in findings[0].message
+
+
+def test_rpl007_fires_on_unenforced_shape_guard(tmp_path):
+    findings, _ = _rpl007_tree(
+        tmp_path, REGISTRY_FULL.format(extra=', "entry": "run"'),
+        kernel_body="""
+            from jax.experimental import pallas as pl
+
+            def run(x, bt=8):
+                return pl.pallas_call(lambda r, o: None, grid=(4,))(x)
+        """)
+    assert codes(findings) == ["RPL007"]
+    assert "divisibility" in findings[0].message
+
+
+def test_rpl007_clean_with_full_contract(tmp_path):
+    findings, _ = _rpl007_tree(
+        tmp_path, REGISTRY_FULL.format(extra=', "entry": "run"'))
+    assert findings == []
+
+
+def test_rpl007_suppressed_above_decorated_entry(tmp_path):
+    """The parity finding anchors on the `def` line; a disable comment
+    ABOVE the decorator stack must still reach it (comment suppression
+    propagates through decorator lines)."""
+    findings, suppressed = _rpl007_tree(
+        tmp_path, REGISTRY_FULL.format(extra=', "entry": "run"'),
+        kernel_body="""
+            import functools
+            from jax.experimental import pallas as pl
+
+            # repro-lint: disable=RPL007
+            @functools.lru_cache(maxsize=None)
+            def run(x, bt=8):
+                T = x.shape[0]
+                assert T % bt == 0
+                return pl.pallas_call(lambda r, o: None,
+                                      grid=(T // bt,))(x)
+        """,
+        ref_body="def foo(x, scale):\n    return x * scale\n")
+    assert findings == []
+    assert codes(suppressed) == ["RPL007"]
+
+
+# ---------------------------------------------------------------------------
+# RPL008 — commit discipline (minimized PR 9 bug)
+# ---------------------------------------------------------------------------
+
+PR9_BUG = """
+    class Eng:
+        def reset_slot(self, slot):
+            self._slot_bufs[slot] = None
+            self._stream_state = self._jit_reset(self._stream_state, slot)
+"""
+
+
+def test_rpl008_fires_on_pr9_half_committed_reset_repro(tmp_path):
+    findings, _ = lint_snippet(tmp_path, PR9_BUG, rules=["RPL008"])
+    assert codes(findings) == ["RPL008"]
+    assert "_slot_bufs" in findings[0].message
+    assert findings[0].related            # mutation line attached
+
+
+def test_rpl008_clean_dispatch_then_commit(tmp_path):
+    # regression fixture for the asr.py reset_slot fix: run the
+    # may-raise jit dispatch FIRST, commit engine state only after
+    findings, _ = lint_snippet(tmp_path, """
+        class Eng:
+            def reset_slot(self, slot):
+                new_state = self._jit_reset(self._stream_state, slot)
+                self._stream_state = new_state
+                self._slot_bufs[slot] = None
+    """, rules=["RPL008"])
+    assert findings == []
+
+
+def test_rpl008_clean_with_restoring_handler(tmp_path):
+    findings, _ = lint_snippet(tmp_path, """
+        class Eng:
+            def reset_slot(self, slot):
+                saved = self._slot_bufs[slot]
+                self._slot_bufs[slot] = None
+                try:
+                    self._jit_reset(slot)
+                except Exception:
+                    self._slot_bufs[slot] = saved
+                    raise
+    """, rules=["RPL008"])
+    assert findings == []
+
+
+def test_rpl008_fires_on_mutator_method_before_fault_probe(tmp_path):
+    findings, _ = lint_snippet(tmp_path, """
+        class Eng:
+            def admit(self, sess):
+                self._beam.append(sess)
+                self._faults.check("admit")
+    """, rules=["RPL008"])
+    assert codes(findings) == ["RPL008"]
+    assert "fault injector" in findings[0].message
+
+
+def test_rpl008_suppressed_at_related_callee_hazard_line(tmp_path):
+    """The hazard sits two files away: eng.py mutates state and calls
+    disp.dispatch(), whose body dispatches a jitted step.  A disable at
+    the CALLEE hazard line suppresses the caller-side finding (the
+    callee owns the raise contract)."""
+    (tmp_path / "disp.py").write_text(textwrap.dedent("""
+        def dispatch(eng, slot):
+            return eng._jit_step(slot)  # repro-lint: disable=RPL008
+    """))
+    (tmp_path / "eng.py").write_text(textwrap.dedent("""
+        from disp import dispatch
+
+        class Eng:
+            def reset(self, slot):
+                self._slot_bufs[slot] = None
+                dispatch(self, slot)
+    """))
+    findings, suppressed = run_paths(
+        [str(tmp_path / "eng.py"), str(tmp_path / "disp.py")],
+        rules=["RPL008"], root=tmp_path)
+    assert findings == []
+    assert codes(suppressed) == ["RPL008"]
+
+
+def test_rpl008_fires_through_unsuppressed_callee_hazard(tmp_path):
+    # same two-file shape without the disable: the interprocedural
+    # propagation itself must fire, and related must point at both the
+    # mutation line and the callee hazard line
+    (tmp_path / "disp.py").write_text(textwrap.dedent("""
+        def dispatch(eng, slot):
+            return eng._jit_step(slot)
+    """))
+    (tmp_path / "eng.py").write_text(textwrap.dedent("""
+        from disp import dispatch
+
+        class Eng:
+            def reset(self, slot):
+                self._slot_bufs[slot] = None
+                dispatch(self, slot)
+    """))
+    findings, _ = run_paths(
+        [str(tmp_path / "eng.py"), str(tmp_path / "disp.py")],
+        rules=["RPL008"], root=tmp_path)
+    assert codes(findings) == ["RPL008"]
+    rel_paths = {p for p, _ in findings[0].related}
+    assert "eng.py" in rel_paths and "disp.py" in rel_paths
+
+
+# ---------------------------------------------------------------------------
 # driver mechanics + self-run
 # ---------------------------------------------------------------------------
 
-def test_rule_docs_cover_all_five_rules():
+def test_rule_docs_cover_all_eight_rules():
     assert sorted(RULE_DOCS) == ["RPL001", "RPL002", "RPL003",
-                                 "RPL004", "RPL005"]
+                                 "RPL004", "RPL005", "RPL006",
+                                 "RPL007", "RPL008"]
 
 
 def test_preceding_line_suppression(tmp_path):
@@ -450,6 +816,65 @@ def test_cli_exit_codes(tmp_path):
     good.write_text("x = 1\n")
     assert main([str(good)]) == 0
     assert main(["--list-rules"]) == 0
+
+
+BAD_SNIPPET = ("import jax\n\n@jax.jit\ndef f(x):\n"
+               "    return float(x)\n")
+
+
+def test_cli_file_wide_disable_with_show_suppressed(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    bad = tmp_path / "bad.py"
+    bad.write_text("# repro-lint: disable-file=RPL001\n" + BAD_SNIPPET)
+    assert main([str(bad)]) == 0
+    # without the flag only the summary counts it; no finding line
+    assert "[suppressed] " not in capsys.readouterr().out
+    assert main([str(bad), "--show-suppressed"]) == 0
+    out = capsys.readouterr().out
+    assert "[suppressed] " in out and "RPL001" in out
+    assert "1 suppressed" in out
+
+
+def test_cli_github_format(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    bad = tmp_path / "bad.py"
+    bad.write_text(BAD_SNIPPET)
+    assert main([str(bad), "--format", "github"]) == 1
+    out = capsys.readouterr().out
+    assert "::error file=" in out
+    assert "title=repro-lint RPL001" in out
+
+    sup = tmp_path / "sup.py"
+    sup.write_text("# repro-lint: disable-file=RPL001\n" + BAD_SNIPPET)
+    assert main([str(sup), "--format", "github",
+                 "--show-suppressed"]) == 0
+    out = capsys.readouterr().out
+    assert "::notice file=" in out          # suppressed demoted
+    assert "::error" not in out
+
+
+def test_cli_baseline_round_trip(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    bad = tmp_path / "bad.py"
+    bad.write_text(BAD_SNIPPET)
+    baseline = tmp_path / "baseline.json"
+
+    # recording the current findings turns the run green...
+    assert main([str(bad), "--baseline", str(baseline),
+                 "--update-baseline"]) == 0
+    assert baseline.exists()
+    assert main([str(bad), "--baseline", str(baseline)]) == 0
+    out = capsys.readouterr().out
+    assert "1 baselined" in out and "[baseline] " in out
+
+    # ...but a NEW finding (second float() coercion, distinct message
+    # context) still gates: the baseline is a per-key count budget
+    bad.write_text(BAD_SNIPPET +
+                   "\n@jax.jit\ndef g(y):\n    return int(y)\n")
+    assert main([str(bad), "--baseline", str(baseline)]) == 1
+    assert main([str(bad), "--baseline", str(baseline),
+                 "--update-baseline"]) == 0
+    assert main([str(bad), "--baseline", str(baseline)]) == 0
 
 
 def test_self_run_over_src_repro_is_clean():

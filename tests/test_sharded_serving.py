@@ -354,6 +354,32 @@ def test_2d_mesh_engine_transcript_parity_d4():
 
 
 @multi_device
+def test_warmed_2d_step_runs_under_strict_transfer_guard():
+    """Once warmed, the data-sharded step's only host<->device traffic
+    is the explicit batch/idx device_put (placed with the step's
+    in_specs shardings): under no_implicit_transfers(strict=True) —
+    which also disallows the device-to-device reshard-on-dispatch that
+    bounces through the host on CPU — a second same-shape step must
+    dispatch with zero hidden per-step round-trips."""
+    from repro.analysis.guards import no_implicit_transfers
+
+    mesh = jax.make_mesh((2, 1), ("data", "model"))
+    engine, _ = asr_demo_engine(4, mesh=mesh)
+    assert engine._input_shardings is not None
+
+    def feed_all():
+        for s in range(4):
+            engine.feed_slot(s, np.zeros((engine._need,), np.float32))
+
+    feed_all()
+    assert engine._step()       # cold: compiles, places state + params
+    feed_all()
+    with no_implicit_transfers(strict=True):
+        assert engine._step()   # warmed same-bucket step: no transfers
+    assert engine.step_shapes[0] == engine.step_shapes[1]
+
+
+@multi_device
 def test_overlap_psum_matches_sync_engine():
     """The latency-hiding chunked-psum FC path must decode the same
     transcripts as the sync psum reference (chunking splits the output
